@@ -1,0 +1,31 @@
+"""Shared helpers for the figure benchmarks."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def write_csv(name: str, rows, header):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def report_line(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def pctile(xs, q):
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    return xs[min(len(xs) - 1, int(q * (len(xs) - 1)))]

@@ -1,0 +1,59 @@
+"""Fig 6: one worker serving (scaled-down) thousands of models.
+
+Major workload: models activate one per second, sharing a fixed aggregate
+rate (batching opportunities vanish, then device memory overflows and
+LOAD/UNLOAD churn moves the bottleneck to the host->device link). Minor
+workload: one sustained model that must keep its goodput throughout.
+"""
+from __future__ import annotations
+
+from benchmarks.common import report_line, write_csv
+from repro.core.scheduler import ClockworkScheduler
+from repro.serving.simulator import TimeSeries, build_cluster, table1_modeldef
+from repro.serving.workload import OpenLoopClient, VariableRateClient
+
+
+def run(quick: bool = False):
+    n_major = 40 if quick else 120
+    major_rate = 300.0 if quick else 500.0
+    dur = float(n_major + 10)
+    models = {f"m{i}": table1_modeldef(f"m{i}") for i in range(n_major)}
+    models["minor"] = table1_modeldef("minor")
+    # small device memory: ~24 resident models max -> guaranteed churn
+    cl = build_cluster(models, device_memory=2.7e9,
+                       scheduler=ClockworkScheduler())
+
+    def make_rate(i):
+        def rate(t, i=i):
+            active = max(1, min(n_major, int(t)))   # one activation per sec
+            return major_rate / active if i < active else 0.0
+        return rate
+
+    clients = [VariableRateClient(cl.loop, cl.submit, f"m{i}", 0.100,
+                                  make_rate(i), stop=dur, seed=i,
+                                  max_rate=major_rate)
+               for i in range(n_major)]
+    clients.append(OpenLoopClient(cl.loop, cl.submit, "minor", 0.100,
+                                  rate=60.0 if quick else 120.0, stop=dur,
+                                  seed=999))
+    cl.attach_clients(clients)
+    ts = TimeSeries(cl, dt=2.0)
+    s = cl.run(dur)
+
+    loads = sum(1 for r in cl.controller.results_log
+                if r.action_type.value == "LOAD"
+                and r.status.value == "SUCCESS")
+    minor_ok = sum(1 for r in cl.controller.completed
+                   if r.model_id == "minor" and r.status == "ok")
+    minor_all = max(1, sum(1 for r in cl.controller.completed
+                           if r.model_id == "minor"))
+    rows = [(x["t"], x["goodput_rs"], x["rejected_rs"],
+             (x["p99"] or 0) * 1e3) for x in ts.samples]
+    write_csv("fig6_scale_up", rows, ["t", "goodput_rs", "rejected_rs",
+                                      "p99_ms"])
+    maxlat = s["max"] * 1e3 if s["max"] == s["max"] else 0.0
+    report_line("fig6_scale_up", 0.0,
+                f"models={n_major + 1};goodput={s['goodput'] / dur:.0f}r/s;"
+                f"loads={loads};minor_sat={minor_ok / minor_all:.3f};"
+                f"max_latency_ms={maxlat:.1f};timeouts={s['timeout']}")
+    return s

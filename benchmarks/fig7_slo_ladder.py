@@ -1,0 +1,78 @@
+"""Fig 7: (left) how low can SLOs go — workload satisfaction as the SLO
+multiplier climbs; (right) latency-sensitive vs batch-client isolation."""
+from __future__ import annotations
+
+from benchmarks.common import report_line, write_csv
+from repro.core.scheduler import ClockworkScheduler
+from repro.serving.simulator import build_cluster, table1_modeldef
+from repro.serving.workload import ClosedLoopClient, OpenLoopClient
+
+B1_MS = 2.73  # paper's batch-1 resnet50 exec latency
+
+
+def ladder(n_models: int, total_rate: float, n_workers: int, dur_per: float):
+    models = {f"m{i}": table1_modeldef(f"m{i}") for i in range(n_models)}
+    rows = []
+    mult = 1.0
+    while mult <= 100.0:
+        slo = B1_MS / 1e3 * mult
+        cl = build_cluster(models, n_workers=n_workers,
+                           scheduler=ClockworkScheduler(),
+                           preload=list(models) * n_workers)
+        clients = [OpenLoopClient(cl.loop, cl.submit, mid, slo,
+                                  rate=total_rate / n_models, stop=dur_per,
+                                  seed=i)
+                   for i, mid in enumerate(models)]
+        cl.attach_clients(clients)
+        s = cl.run(dur_per + 0.5)
+        total = max(1, s["goodput"] + s["timeout"] + s["rejected"])
+        rows.append((mult, slo * 1e3, s["goodput"] / total))
+        mult *= 1.5
+    return rows
+
+
+def run(quick: bool = False):
+    dur = 3.0 if quick else 8.0
+    out = []
+    for (n, rate, workers) in [(12, 600.0, 2), (12, 1200.0, 2),
+                               (12, 2400.0, 2)] if not quick else \
+                              [(6, 300.0, 2), (6, 900.0, 2)]:
+        rows = ladder(n, rate, workers, dur)
+        for mult, slo_ms, sat in rows:
+            out.append((n, rate, mult, slo_ms, sat))
+        min_ok = next((m for (m, _, s) in rows if s >= 0.99), None)
+        report_line(f"fig7_min_slo_R{int(rate)}", 0.0,
+                    f"min_mult_99pct={min_ok}")
+    write_csv("fig7_slo_ladder", out,
+              ["n_models", "rate_rs", "slo_mult", "slo_ms", "satisfaction"])
+
+    # --- right: LS/BC isolation
+    models = {f"ls{i}": table1_modeldef(f"ls{i}") for i in range(3)}
+    models.update({f"bc{i}": table1_modeldef(f"bc{i}") for i in range(6)})
+
+    def iso(with_bc: bool):
+        cl = build_cluster(models, n_workers=2,
+                           scheduler=ClockworkScheduler())
+        clients = [OpenLoopClient(cl.loop, cl.submit, f"ls{i}", 0.050,
+                                  rate=120.0, stop=dur, seed=i)
+                   for i in range(3)]
+        if with_bc:
+            clients += [ClosedLoopClient(cl.loop, cl.submit, f"bc{i}",
+                                         10.0, concurrency=16)
+                        for i in range(6)]
+        cl.attach_clients(clients)
+        cl.run(dur + 0.5)
+        ls_ok = sum(1 for r in cl.controller.completed
+                    if r.model_id.startswith("ls") and r.status == "ok")
+        ls_all = max(1, sum(1 for r in cl.controller.completed
+                            if r.model_id.startswith("ls")))
+        bc = sum(1 for r in cl.controller.completed
+                 if r.model_id.startswith("bc") and r.status == "ok")
+        return ls_ok / ls_all, bc / dur
+
+    alone, _ = iso(False)
+    shared, bc_rate = iso(True)
+    report_line("fig7_isolation", 0.0,
+                f"ls_sat_alone={alone:.3f};ls_sat_shared={shared:.3f};"
+                f"bc_throughput={bc_rate:.0f}r/s")
+    return out

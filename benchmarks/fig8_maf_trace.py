@@ -1,0 +1,47 @@
+"""Fig 8: MAF-like trace replay — many models, mixed sustained/bursty/
+periodic/cold workloads (the paper replays the Microsoft Azure Functions
+trace; we synthesize the same workload-shape mix, DESIGN.md §6)."""
+from __future__ import annotations
+
+from benchmarks.common import report_line, write_csv
+from repro.core.scheduler import ClockworkScheduler
+from repro.serving.simulator import TimeSeries, build_cluster, table1_modeldef
+from repro.serving.workload import VariableRateClient, maf_like_rates
+
+FAMILIES = ["resnet50_v2", "resnet18_v2", "densenet121", "googlenet",
+            "inceptionv3", "resnext50_32x4d", "winograd_resnet18_v2",
+            "mobile_pose_mobilenet1.0"]
+
+
+def run(quick: bool = False):
+    n_models = 40 if quick else 120
+    total_rate = 400.0 if quick else 1200.0
+    dur = 30.0 if quick else 90.0
+    n_workers = 2 if quick else 4
+    rates = maf_like_rates(n_models, total_rate, dur, seed=2)
+    models = {mid: table1_modeldef(mid, family=FAMILIES[i % len(FAMILIES)])
+              for i, mid in enumerate(rates)}
+    cl = build_cluster(models, n_workers=n_workers, device_memory=16e9,
+                       scheduler=ClockworkScheduler())
+    clients = [VariableRateClient(cl.loop, cl.submit, mid, 0.100, fn,
+                                  stop=dur, seed=i,
+                                  max_rate=total_rate / 4)
+               for i, (mid, fn) in enumerate(rates.items())]
+    cl.attach_clients(clients)
+    ts = TimeSeries(cl, dt=max(dur / 30, 1.0))
+    s = cl.run(dur + 0.5)
+
+    cold = sum(1 for r in cl.controller.results_log
+               if r.action_type.value == "LOAD"
+               and r.status.value == "SUCCESS")
+    total = max(1, s["goodput"] + s["timeout"] + s["rejected"])
+    rows = [(x["t"], x["goodput_rs"], (x["p99"] or 0) * 1e3,
+             (x["max"] or 0) * 1e3) for x in ts.samples]
+    write_csv("fig8_maf_trace", rows, ["t", "goodput_rs", "p99_ms",
+                                       "max_ms"])
+    report_line("fig8_maf_trace", 0.0,
+                f"models={n_models};rate={s['goodput'] / dur:.0f}r/s;"
+                f"goodput_frac={s['goodput'] / total:.5f};"
+                f"timeouts={s['timeout']};loads={cold};"
+                f"p999_ms={(s['p999'] or 0) * 1e3:.1f}")
+    return s

@@ -1,0 +1,102 @@
+"""Clockwork-for-LLMs on TPU v5e profiles: serve the assigned architectures.
+
+Closes the dry-run -> serving loop: DECODE/PREFILL step-time bounds derived
+from the compiled dry-run artifacts (`experiments/v5e_profiles.json`,
+written by benchmarks/roofline.py) become the latency models of pod-slice
+workers, and the *same* Clockwork controller that served ResNets schedules
+continuous-batching DECODE actions across architectures with per-arch SLOs.
+
+Worker = one 256-chip v5e pod slice hosting every model (weights in host
+RAM, paged HBM residency — the paper's architecture at pod scale). LOAD =
+host->HBM DMA across the pod's 64 hosts.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import report_line, write_csv
+from repro.core.actions import ActionType
+from repro.core.scheduler import ClockworkScheduler
+from repro.core.worker import ModelDef
+from repro.serving.simulator import build_cluster
+from repro.serving.workload import OpenLoopClient
+
+PROFILE_PATH = os.environ.get("V5E_PROFILES", "experiments/v5e_profiles.json")
+HOST_DMA_PER_POD = 25e9 * 64      # 64 hosts per v5e-256 pod, parallel DMA
+
+# serve the architectures with O(1)-or-small decode state first (the most
+# Clockwork-friendly), plus one big dense model
+SERVE_ARCHS = ["mamba2-130m", "recurrentgemma-2b", "qwen2-0.5b",
+               "gemma2-27b", "starcoder2-3b"]
+
+
+def _weights_bytes(arch: str) -> int:
+    from repro.configs import get_config
+    from repro.models import params as pspec
+    from repro.models.registry import get_bundle
+    return pspec.param_bytes(get_bundle(get_config(arch)).spec())
+
+
+def v5e_modeldefs():
+    if not os.path.exists(PROFILE_PATH):
+        return None
+    prof = json.load(open(PROFILE_PATH))
+    models = {}
+    for arch in SERVE_ARCHS:
+        p = prof.get(arch, {})
+        dec = p.get("decode_32k", {}).get("step_s")
+        if dec is None:
+            continue
+        # decode step time vs batch: memory-bound floor (weights read) +
+        # batch-proportional KV stream, anchored at the batch-128 dry-run cell
+        lat = {}
+        for b in (1, 2, 4, 8, 16, 32, 64, 128):
+            lat[("DECODE", b)] = max(dec * (0.3 + 0.7 * b / 128), 1e-5)
+        models[arch] = ModelDef(
+            model_id=arch,
+            weights_bytes=_weights_bytes(arch),
+            exec_latency=lat)
+    return models
+
+
+def run(quick: bool = False):
+    models = v5e_modeldefs()
+    if not models:
+        report_line("lm_serving_v5e", 0.0, "no v5e profiles (run dry-run)")
+        return None
+    dur = 8.0 if quick else 20.0
+    # 4 pod-slice workers; HBM pool ~16GB*256 minus workspace
+    cl = build_cluster(models, n_workers=4, device_memory=256 * 14e9,
+                       host_to_dev_bw=HOST_DMA_PER_POD,
+                       scheduler=ClockworkScheduler(
+                           batch_sizes=(1, 2, 4, 8, 16, 32, 64, 128),
+                           action_type=ActionType.DECODE))
+    # per-arch SLO: small models get tight decode SLOs, big ones looser
+    slos = {"mamba2-130m": 0.005, "qwen2-0.5b": 0.010,
+            "recurrentgemma-2b": 0.010, "starcoder2-3b": 0.020,
+            "gemma2-27b": 0.040}
+    rates = {"mamba2-130m": 4000.0, "qwen2-0.5b": 2500.0,
+             "recurrentgemma-2b": 2000.0, "starcoder2-3b": 1500.0,
+             "gemma2-27b": 800.0}
+    clients = [OpenLoopClient(cl.loop, cl.submit, mid, slos[mid],
+                              rate=rates[mid] * (0.3 if quick else 1.0),
+                              stop=dur, seed=i)
+               for i, mid in enumerate(models)]
+    cl.attach_clients(clients)
+    s = cl.run(dur + 0.5)
+
+    rows = []
+    for mid in models:
+        done = [r for r in cl.controller.completed if r.model_id == mid]
+        ok = sum(1 for r in done if r.status == "ok")
+        rows.append((mid, slos[mid] * 1e3, len(done), ok,
+                     ok / max(len(done), 1)))
+    write_csv("lm_serving_v5e", rows,
+              ["arch", "slo_ms", "requests", "ok", "satisfaction"])
+    total = max(1, s["goodput"] + s["timeout"] + s["rejected"])
+    report_line("lm_serving_v5e", 0.0,
+                f"archs={len(models)};goodput={s['goodput'] / dur:.0f}r/s;"
+                f"sat={s['goodput'] / total:.4f};timeouts={s['timeout']};"
+                f"p99_ms={(s['p99'] or 0) * 1e3:.1f}")
+    return s

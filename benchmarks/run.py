@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # standard sizes
+    BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run   # CI sizes
+
+Prints ``name,us_per_call,derived`` CSV lines; richer per-figure CSVs land
+in experiments/bench/.
+"""
+from __future__ import annotations
+
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    quick = os.environ.get("BENCH_QUICK", "0") == "1"
+    from benchmarks import (fig2_predictability, fig5_goodput_vs_slo,
+                            fig6_scale_up, fig7_slo_ladder, fig8_maf_trace,
+                            fig9_prediction_error, lm_serving_v5e, roofline,
+                            table1_model_profiles)
+    benches = [
+        ("fig2_predictability", fig2_predictability.run),
+        ("table1_model_profiles", table1_model_profiles.run),
+        ("fig5_goodput_vs_slo", fig5_goodput_vs_slo.run),
+        ("fig6_scale_up", fig6_scale_up.run),
+        ("fig7_slo_ladder", fig7_slo_ladder.run),
+        ("fig8_maf_trace", fig8_maf_trace.run),
+        ("fig9_prediction_error", fig9_prediction_error.run),
+        ("roofline", roofline.run),
+        ("lm_serving_v5e", lm_serving_v5e.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+            print(f"{name}_wallclock,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}_wallclock,{(time.time() - t0) * 1e6:.0f},"
+                  f"FAILED:{type(e).__name__}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step, restore_checkpoint, save_checkpoint)

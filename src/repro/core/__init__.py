@@ -1,0 +1,22 @@
+"""Clockwork core: consolidated-choice model serving.
+
+The paper's contribution, adapted to TPU serving (DESIGN.md §2):
+  * actions.py    — LOAD/UNLOAD/INFER(+PREFILL/DECODE) with [earliest, latest]
+  * clock.py      — virtual/real clocks + the discrete event loop
+  * predictor.py  — rolling-p99 action latency profiles (per model, batch)
+  * pagecache.py  — paged weight/KV memory accounting
+  * worker.py     — predictable worker: per-resource executors, window
+                    enforcement, reject-don't-queue straggler mitigation
+  * scheduler.py  — the Appendix-B strategy-queue scheduler
+  * controller.py — centralized controller: worker mirrors, SLO admission,
+                    LOAD priorities, fault detection, elasticity
+  * baselines.py  — Clipper-like and INFaaS-like reactive schedulers
+"""
+from repro.core.actions import (Action, ActionType, Request, Result,
+                                ResultStatus)  # noqa: F401
+from repro.core.clock import EventLoop, VirtualClock, RealClock  # noqa: F401
+from repro.core.controller import Controller  # noqa: F401
+from repro.core.pagecache import PageCache  # noqa: F401
+from repro.core.predictor import ActionProfiler  # noqa: F401
+from repro.core.scheduler import ClockworkScheduler  # noqa: F401
+from repro.core.worker import ModelDef, SimBackend, Worker  # noqa: F401

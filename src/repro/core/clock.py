@@ -1,0 +1,82 @@
+"""Clocks + the discrete event loop.
+
+The same controller/worker/scheduler code runs under either clock:
+  * VirtualClock — discrete-event simulation (paper-scale experiments:
+    thousands of models, millions of requests, replayed in seconds)
+  * RealClock    — wall time; event callbacks execute JAX programs
+    (quickstart / engine demos on the local device)
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from typing import Callable, Optional
+
+
+class VirtualClock:
+    def __init__(self, start: float = 0.0):
+        self._now = start
+
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float):
+        assert t >= self._now - 1e-12, (t, self._now)
+        self._now = max(self._now, t)
+
+
+class RealClock:
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def advance_to(self, t: float):
+        delta = t - self.now()
+        if delta > 0:
+            time.sleep(delta)
+
+
+class EventLoop:
+    """Priority-queue event loop shared by simulation and real execution."""
+
+    def __init__(self, clock=None):
+        self.clock = clock if clock is not None else VirtualClock()
+        self._heap = []
+        self._seq = itertools.count()
+
+    def now(self) -> float:
+        return self.clock.now()
+
+    def schedule(self, t: float, fn: Callable[[], None]):
+        heapq.heappush(self._heap, (max(t, self.now()), next(self._seq), fn))
+
+    def schedule_in(self, dt: float, fn: Callable[[], None]):
+        self.schedule(self.now() + dt, fn)
+
+    def empty(self) -> bool:
+        return not self._heap
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def run_until(self, t_end: float, max_events: int = 100_000_000):
+        n = 0
+        while self._heap and self._heap[0][0] <= t_end and n < max_events:
+            t, _, fn = heapq.heappop(self._heap)
+            self.clock.advance_to(t)
+            fn()
+            n += 1
+        self.clock.advance_to(t_end)
+        return n
+
+    def run_all(self, max_events: int = 100_000_000):
+        n = 0
+        while self._heap and n < max_events:
+            t, _, fn = heapq.heappop(self._heap)
+            self.clock.advance_to(t)
+            fn()
+            n += 1
+        return n

@@ -1,0 +1,301 @@
+"""Centralized controller (§4.5, §5.3).
+
+All decision-making lives here. The controller keeps, per worker:
+  * memory state — a PageCache *mirror* updated optimistically on LOAD/UNLOAD
+    submission and reconciled on results,
+  * action profiles — rolling-window duration estimates (predictor.py),
+  * pending actions — per-executor availability estimates.
+
+It delegates policy to a pluggable Scheduler (scheduler.py implements the
+paper's; baselines.py the reactive comparisons) — "this design concentrates
+all choice in a single place, and enables different scheduler implementations
+to be easily dropped in" (§5.3).
+
+Fault tolerance (beyond the paper, §7 "future work"): heartbeats + missing-
+result detection mark workers dead; their mirrors are dropped, outstanding
+requests re-queued, and the LOAD-priority machinery re-replicates their
+models elsewhere. Workers can be added/removed at runtime (elasticity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.actions import (EXEC_TYPES, Action, ActionType, Request,
+                                Result, ResultStatus)
+from repro.core.clock import EventLoop
+from repro.core.pagecache import PageCache
+from repro.core.predictor import ActionProfiler
+from repro.core.worker import ModelDef, Worker
+
+
+@dataclasses.dataclass
+class GpuMirror:
+    pagecache: PageCache
+    loading: set = dataclasses.field(default_factory=set)
+    exec_free_at: float = 0.0
+    load_free_at: float = 0.0
+
+
+class WorkerMirror:
+    def __init__(self, worker: Worker):
+        self.worker = worker
+        self.worker_id = worker.worker_id
+        self.alive = True
+        self.gpus: List[GpuMirror] = [
+            GpuMirror(pagecache=PageCache(
+                pc.total_pages * pc.page_bytes, pc.page_bytes))
+            for pc in worker.pagecaches
+        ]
+        self.outstanding: Dict[int, Action] = {}
+        self.missed_results = 0
+
+    def gpu_ids(self):
+        return range(len(self.gpus))
+
+
+class Controller:
+    def __init__(self, loop: EventLoop, models: Dict[str, ModelDef],
+                 scheduler, *, action_delay: float = 0.0005,
+                 heartbeat_interval: float = 1.0,
+                 heartbeat_timeout: float = 0.5,
+                 result_grace: float = 0.050,
+                 default_slo: float = 0.100):
+        self.loop = loop
+        self.models = models
+        self.scheduler = scheduler
+        self.action_delay = action_delay
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_timeout = heartbeat_timeout
+        self.result_grace = result_grace
+        self.default_slo = default_slo
+
+        self.workers: Dict[str, WorkerMirror] = {}
+        self.profiler = ActionProfiler()
+        self.requests: Dict[int, Request] = {}
+        self.on_response: Optional[Callable[[Request], None]] = None
+        self.tick_interval = 0.001
+        self._ticker_on = False
+
+        # telemetry
+        self.completed: List[Request] = []
+        self.results_log: List[Result] = []
+        self.stats = {"goodput": 0, "timeout": 0, "rejected": 0,
+                      "cold_starts": 0, "actions": 0, "dead_workers": 0}
+
+        scheduler.attach(self)
+
+    # ------------------------------------------------------------ workers
+    def add_worker(self, worker: Worker, profiles: Optional[dict] = None):
+        """Register a worker; `profiles` seeds (type, model, batch)->secs."""
+        m = WorkerMirror(worker)
+        self.workers[worker.worker_id] = m
+        worker.on_result = self.on_result
+        if profiles:
+            for (t, mid, b), d in profiles.items():
+                self.profiler.seed(t, mid, b, d)
+        self.scheduler.on_topology_change()
+        return m
+
+    def remove_worker(self, worker_id: str):
+        """Graceful removal (elastic scale-down)."""
+        self._kill_mirror(worker_id, graceful=True)
+
+    def _kill_mirror(self, worker_id: str, graceful: bool = False):
+        m = self.workers.pop(worker_id, None)
+        if m is None:
+            return
+        if not graceful:
+            self.stats["dead_workers"] += 1
+        # re-queue outstanding exec requests if their deadline still allows
+        for a in m.outstanding.values():
+            for rid in a.request_ids:
+                req = self.requests.get(rid)
+                if req is not None and req.status is None:
+                    self.scheduler.requeue(req)
+        self.scheduler.on_topology_change()
+        self.scheduler.tick()
+        self._ensure_ticker()
+
+    def worker_failed(self, worker_id: str):
+        self._kill_mirror(worker_id, graceful=False)
+
+    def start_heartbeats(self):
+        def beat():
+            for wid, m in list(self.workers.items()):
+                ok = {"v": False}
+
+                def pong(ok=ok):
+                    ok["v"] = True
+
+                m.worker.ping(pong)
+
+                def check(wid=wid, ok=ok):
+                    if not ok["v"]:
+                        self.worker_failed(wid)
+
+                self.loop.schedule_in(self.heartbeat_timeout, check)
+            self.loop.schedule_in(self.heartbeat_interval, beat)
+
+        self.loop.schedule_in(self.heartbeat_interval, beat)
+
+    # ------------------------------------------------------------ requests
+    def _has_pending(self) -> bool:
+        return any(self.scheduler.queues.values())
+
+    def _ticker(self):
+        """Periodic scheduler drive while work is pending (the event-driven
+        stand-in for Clockwork's continuously-running scheduler thread)."""
+        self.scheduler.tick()
+        if self._has_pending():
+            self.loop.schedule_in(self.tick_interval, self._ticker)
+        else:
+            self._ticker_on = False
+
+    def _ensure_ticker(self):
+        if not self._ticker_on:
+            self._ticker_on = True
+            self.loop.schedule_in(self.tick_interval, self._ticker)
+
+    def on_request(self, req: Request):
+        self.requests[req.id] = req
+        self.scheduler.on_request(req)
+        self.scheduler.tick()
+        self._ensure_ticker()
+
+    def reject(self, req: Request, when: Optional[float] = None):
+        if req.status is not None:
+            return
+        req.status = "rejected"
+        req.completion = when if when is not None else self.loop.now()
+        self.stats["rejected"] += 1
+        self.completed.append(req)
+        if self.on_response:
+            self.on_response(req)
+
+    def complete(self, req: Request, when: float):
+        if req.status is not None:
+            return
+        req.completion = when
+        if when <= req.deadline + 1e-9:
+            req.status = "ok"
+            self.stats["goodput"] += 1
+        else:
+            req.status = "timeout"
+            self.stats["timeout"] += 1
+        self.completed.append(req)
+        if self.on_response:
+            self.on_response(req)
+
+    # ------------------------------------------------------------ actions
+    def send_action(self, action: Action):
+        m = self.workers.get(action.worker_id)
+        if m is None:
+            return
+        now = self.loop.now()
+        action.issued_at = now
+        g = m.gpus[action.gpu_id]
+        # pending-actions model: an executor starts this action no earlier
+        # than when its already-submitted work completes
+        if action.type == ActionType.LOAD:
+            start = max(now + self.action_delay, action.earliest,
+                        g.load_free_at)
+        else:
+            start = max(now + self.action_delay, action.earliest,
+                        g.exec_free_at)
+        action.expected_completion = start + action.expected_duration
+        # optimistic mirror updates (reconciled on result)
+        if action.type == ActionType.LOAD:
+            model = self.models[action.model_id]
+            g.pagecache.alloc(action.model_id,
+                              model.pages(g.pagecache.page_bytes))
+            g.loading.add(action.model_id)
+            g.load_free_at = action.expected_completion
+        elif action.type == ActionType.UNLOAD:
+            g.pagecache.free(action.model_id)
+        elif action.type in EXEC_TYPES:
+            g.pagecache.touch(action.model_id)
+            g.exec_free_at = action.expected_completion
+        m.outstanding[action.id] = action
+        self.stats["actions"] += 1
+        self.loop.schedule_in(self.action_delay,
+                              lambda: m.worker.receive(action))
+        # missing-result failure detection
+        if action.type != ActionType.UNLOAD:
+            deadline = action.expected_completion + self.result_grace \
+                + 2 * self.action_delay
+
+            def check(aid=action.id, wid=action.worker_id):
+                mm = self.workers.get(wid)
+                if mm is not None and aid in mm.outstanding:
+                    mm.missed_results += 1
+                    if mm.missed_results >= 1:
+                        self.worker_failed(wid)
+
+            self.loop.schedule(max(deadline, action.latest
+                                   + action.expected_duration
+                                   + self.result_grace), check)
+
+    def on_result(self, result: Result):
+        self.results_log.append(result)
+        m = self.workers.get(result.worker_id)
+        if m is not None:
+            m.outstanding.pop(result.action_id, None)
+            g = m.gpus[result.gpu_id]
+            if result.action_type == ActionType.LOAD:
+                g.loading.discard(result.model_id)
+                if result.status is not ResultStatus.SUCCESS:
+                    g.pagecache.free(result.model_id)  # reconcile mirror
+                g.load_free_at = self._pending_free_at(
+                    m, result.gpu_id, (ActionType.LOAD,), result.t_end)
+            elif result.action_type in EXEC_TYPES:
+                g.exec_free_at = self._pending_free_at(
+                    m, result.gpu_id, EXEC_TYPES, result.t_end)
+        if result.status is ResultStatus.SUCCESS and result.duration > 0:
+            self.profiler.observe(result.action_type.value, result.model_id,
+                                  result.batch_size, result.duration)
+        # request completion / re-queue
+        for rid in result.request_ids:
+            req = self.requests.get(rid)
+            if req is None:
+                continue
+            if result.status is ResultStatus.SUCCESS:
+                self.complete(req, result.t_end)
+            else:
+                self.scheduler.requeue(req)
+        self.scheduler.on_result(result)
+        self.scheduler.tick()
+        if self._has_pending():
+            self._ensure_ticker()
+
+    # ------------------------------------------------------------ helpers
+    def _pending_free_at(self, m: WorkerMirror, gpu_id: int, types,
+                         fallback: float) -> float:
+        pend = [a.expected_completion for a in m.outstanding.values()
+                if a.gpu_id == gpu_id and a.type in types]
+        return max(pend) if pend else fallback
+
+    def loaded_gpus(self, model_id: str):
+        """(worker_id, gpu_id) pairs where model is resident or loading."""
+        out = []
+        for wid, m in self.workers.items():
+            for gid in m.gpu_ids():
+                g = m.gpus[gid]
+                if g.pagecache.contains(model_id):
+                    out.append((wid, gid))
+        return out
+
+    def summary(self) -> dict:
+        lat = [r.completion - r.arrival for r in self.completed
+               if r.status == "ok"]
+        lat.sort()
+
+        def pct(q):
+            if not lat:
+                return float("nan")
+            i = min(len(lat) - 1, int(q * (len(lat) - 1)))
+            return lat[i]
+
+        return dict(self.stats, total=len(self.completed),
+                    p50=pct(0.50), p99=pct(0.99), p999=pct(0.999),
+                    max=lat[-1] if lat else float("nan"))

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    Rules,
+    make_rules,
+    spec_for,
+    constrain,
+    use_rules,
+    shardings_for,
+    current_mesh_rules,
+)

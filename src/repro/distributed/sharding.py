@@ -1,0 +1,201 @@
+"""Logical-axis sharding rules.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"seq_kv", "experts", ...). A :class:`Rules` mapping — built per
+(config, step-kind, shape, mesh) — resolves each logical axis to zero or more
+mesh axes. Two attention TP modes fall out of the same model code:
+
+* ``heads`` mode  (n_heads divisible by the model axis): Megatron-style —
+  QKV/O sharded over heads, attention compute local per shard.
+* ``context`` mode (n_heads not divisible): QKV/O weights sharded over the
+  contracting d_model dim, attention *scores* sharded over the KV-sequence
+  dim; softmax reductions over that dim become SPMD all-reduces
+  (flash-decode-style partial-softmax combine, expressed at the einsum level).
+
+All constraints are best-effort: a mesh axis that does not evenly divide the
+corresponding dim is dropped (important for smoke tests on 1 device and for
+leftover/irregular dims).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import params as pspec
+
+Rules = dict
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def heads_divisible(cfg: ModelConfig, mesh: Mesh) -> bool:
+    m = mesh.shape.get("model", 1)
+    return cfg.n_heads % m == 0
+
+
+def kv_heads_divisible(cfg: ModelConfig, mesh: Mesh) -> bool:
+    m = mesh.shape.get("model", 1)
+    return cfg.n_kv_heads % m == 0
+
+
+def attn_mode(cfg: ModelConfig, mesh: Mesh, step_kind: str) -> str:
+    """heads | context — chosen per (arch, step kind); see DESIGN.md §4."""
+    if cfg.pattern and all(k == "ssm" for k in cfg.pattern):
+        return "heads"  # irrelevant; ssm uses its own axes
+    if step_kind == "decode":
+        # The KV cache is the dominant tensor: shard it over kv-heads when
+        # possible, otherwise over the sequence dim (context mode).
+        return "heads" if kv_heads_divisible(cfg, mesh) else "context"
+    return "heads" if heads_divisible(cfg, mesh) else "context"
+
+
+def make_rules(mesh: Mesh, cfg: ModelConfig, step_kind: str,
+               shape: Optional[ShapeSpec] = None) -> Rules:
+    dp = _dp_axes(mesh)
+    model = ("model",) if "model" in mesh.axis_names else ()
+    mode = attn_mode(cfg, mesh, step_kind)
+    batch = shape.global_batch if shape is not None else None
+
+    if step_kind == "decode" and batch == 1:
+        # Nothing to data-parallelize: give the whole mesh to the sequence /
+        # state dims (long-context decode).
+        batch_axes = ()
+        seq_kv = dp + model if mode == "context" else ()
+    else:
+        batch_axes = dp
+        seq_kv = model if mode == "context" else ()
+
+    rules = {
+        "batch": batch_axes,
+        "seq": (),
+        "seq_act": (model if (step_kind == "train" and cfg.seq_shard_train)
+                    else ()),
+        "seq_kv": seq_kv,
+        "kv_seg": seq_kv,   # segment dim of combine-once context flash
+        "heads": model if mode == "heads" else (),
+        "heads_o": model if heads_divisible(cfg, mesh) else (),
+        "d_model_out": (model if (mode == "context"
+                                  and not heads_divisible(cfg, mesh))
+                        else ()),
+        "kv_heads": model if (mode == "heads" and kv_heads_divisible(cfg, mesh)) else (),
+        "head_dim": (),
+        "d_model": (),
+        "d_model_tp": model if mode == "context" else (),
+        "d_ff": model,
+        "vocab": model,
+        "experts": tuple(a for a in ("pod", "data")
+                         if a in mesh.axis_names),
+        "expert_ff": model,
+        "ssm_heads": (),
+        "ssm_hd": model,
+        "ssm_state": (),
+        "d_rnn": model,
+        "conv_w": (),
+        "layers": (),
+        "frames": (),
+        "patches": (),
+    }
+    rules["_mode"] = mode
+    return rules
+
+
+def spec_for(rules: Rules, axes, shape=None) -> P:
+    """PartitionSpec from logical axes, dropping non-dividing/duplicate axes."""
+    mesh = _CTX.mesh
+    used = set()
+    out = []
+    for i, ax in enumerate(axes):
+        mesh_axes = rules.get(ax, ()) if ax is not None else ()
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        picked = []
+        total = 1
+        for m in mesh_axes:
+            if m in used or mesh is None or m not in mesh.shape:
+                continue
+            total *= mesh.shape[m]
+            picked.append(m)
+        if shape is not None and picked:
+            if total == 0 or shape[i] % total != 0:
+                # Best effort: retry with a prefix of the axes.
+                picked2, total2 = [], 1
+                for m in picked:
+                    if shape[i] % (total2 * mesh.shape[m]) == 0:
+                        picked2.append(m)
+                        total2 *= mesh.shape[m]
+                picked = picked2
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[Rules]):
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh_rules():
+    return _CTX.mesh, _CTX.rules
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint via logical axes; no-op outside use_rules."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = spec_for(_CTX.rules, axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def shardings_for(tree, mesh: Mesh, rules: Rules):
+    """NamedShardings for a ParamSpec tree (or tree of (shape, axes))."""
+    def one(s):
+        with use_rules(mesh, rules):
+            spec = spec_for(rules, s.axes, tuple(s.shape))
+        return NamedSharding(mesh, spec)
+    return pspec.tree_map_specs(one, tree)
+
+
+def shardings_from_axes(abstract_tree, axes_tree, mesh: Mesh, rules: Rules):
+    """NamedShardings for a tree of ShapeDtypeStructs + parallel axes tree.
+
+    ``axes_tree`` carries a tuple of logical axis names at every position
+    where ``abstract_tree`` carries an array."""
+    flat, treedef = jax.tree.flatten(abstract_tree)
+    axes_flat = treedef.flatten_up_to(axes_tree)
+    out = []
+    with use_rules(mesh, rules):
+        for sds, axes in zip(flat, axes_flat):
+            out.append(NamedSharding(mesh,
+                                     spec_for(rules, axes, tuple(sds.shape))))
+    return jax.tree.unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,214 @@
+"""Step builders: train / prefill / decode, plain and mesh-sharded.
+
+`build_sharded_step` is the single entrypoint used by the dry-run, the
+trainer, and the serving engine — so what gets lowered in the multi-pod
+dry-run is byte-for-byte what the runnable system executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.shapes import (batch_logical_axes, decode_cache_len,
+                                  inputs_for)
+from repro.distributed.sharding import (make_rules, replicated,
+                                        shardings_for, shardings_from_axes,
+                                        use_rules)
+from repro.models import params as pspec
+from repro.models.lm import greedy_sample
+from repro.models.registry import get_bundle
+from repro.training.optimizer import clip_by_global_norm, get_optimizer
+
+
+def cross_entropy(cfg: ModelConfig, logits, targets):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    return -ll.mean()
+
+
+# ------------------------------------------------------------ plain steps
+
+def make_train_step(cfg: ModelConfig, opt, chunk: int = 1024,
+                    microbatches: Optional[int] = None):
+    """Train step with optional gradient accumulation.
+
+    Microbatching bounds the live activation checkpoints (layer inputs saved
+    per scan group) to one microbatch — the lever that fits the 94-layer /
+    48-layer MoE train cells in 16 GB/chip (EXPERIMENTS.md §Perf)."""
+    bundle = get_bundle(cfg)
+
+    def loss_fn(p, mb):
+        logits = bundle.train_logits(p, mb, chunk=chunk)
+        return cross_entropy(cfg, logits, mb["targets"])
+
+    def finish(params, opt_state, loss, grads, step):
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": step + 1}
+        return new_params, new_opt, metrics
+
+    def train_step(params, opt_state, batch, step):
+        n = microbatches if microbatches is not None else cfg.microbatches
+        b0 = jax.tree.leaves(batch)[0].shape[0]
+        if n <= 1 or b0 % n != 0:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return finish(params, opt_state, loss, grads, step)
+
+        micro = jax.tree.map(
+            lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
+        # accumulate in the parameter dtype: an fp32 accumulator would double
+        # the parameter footprint per device, which alone overflows 16 GB for
+        # the 784B-param llama4 train cell (EXPERIMENTS.md §Perf). bf16
+        # accumulation over <=16 microbatches costs <1% gradient noise.
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+
+        def body(carry, mb):
+            lsum, gacc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            gacc = jax.tree.map(lambda a, x: (a + x.astype(a.dtype)).astype(
+                a.dtype), gacc, g)
+            return (lsum + l, gacc), None
+
+        (lsum, gsum), _ = jax.lax.scan(body, (jnp.float32(0.0), g0), micro)
+        loss = lsum / n
+        grads = jax.tree.map(lambda g, p: (g.astype(jnp.float32) / n
+                                           ).astype(p.dtype), gsum, params)
+        return finish(params, opt_state, loss, grads, step)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, chunk: int = 1024,
+                      cache_len: Optional[int] = None):
+    bundle = get_bundle(cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = bundle.prefill(params, batch, chunk=chunk,
+                                       cache_len=cache_len)
+        return greedy_sample(logits), cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    bundle = get_bundle(cfg)
+
+    def decode_step(params, cache, tokens, cur_index):
+        logits, new_cache = bundle.decode(params, cache, tokens, cur_index)
+        return greedy_sample(logits), new_cache
+
+    return decode_step
+
+
+# --------------------------------------------------------- sharded builder
+
+@dataclasses.dataclass
+class ShardedStep:
+    kind: str
+    jitted: Any            # jit-wrapped fn, ready for .lower(*abstract)
+    abstract: tuple        # abstract args matching the jit signature
+    rules: dict
+    mesh: Mesh
+
+
+def _sds_i32():
+    return jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def build_sharded_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                       lr: float = 1e-3, chunk: int = 1024) -> ShardedStep:
+    rules = make_rules(mesh, cfg, shape.kind, shape)
+    bundle = get_bundle(cfg)
+    spec = bundle.spec()
+    param_abs = pspec.abstract(spec)
+    param_sh = shardings_for(spec, mesh, rules)
+
+    batch_abs = inputs_for(cfg, shape)
+    batch_sh = shardings_from_axes(batch_abs, batch_logical_axes(batch_abs),
+                                   mesh, rules)
+
+    if shape.kind == "train":
+        opt = get_optimizer(cfg.optimizer, lr=lr)
+        opt_spec = opt.spec(spec)
+        opt_abs = pspec.abstract(opt_spec)
+        opt_sh = shardings_for(opt_spec, mesh, rules)
+        # largest microbatch count <= cfg.microbatches such that each
+        # microbatch still shards evenly over the data axes
+        import math
+        dp = 1
+        for a in rules.get("batch", ()):
+            dp *= mesh.shape.get(a, 1)
+        n_mb = max(1, min(cfg.microbatches, shape.global_batch // max(dp, 1)))
+        while n_mb > 1 and (shape.global_batch % n_mb
+                            or (shape.global_batch // n_mb) % dp):
+            n_mb -= 1
+        inner = make_train_step(cfg, opt, chunk=chunk, microbatches=n_mb)
+
+        def fn(params, opt_state, batch, step):
+            with use_rules(mesh, rules):
+                return inner(params, opt_state, batch, step)
+
+        metrics_sh = {"loss": replicated(mesh), "grad_norm": replicated(mesh),
+                      "step": replicated(mesh)}
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, opt_sh, batch_sh, replicated(mesh)),
+            out_shardings=(param_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1),
+        )
+        return ShardedStep("train", jitted,
+                           (param_abs, opt_abs, batch_abs, _sds_i32()),
+                           rules, mesh)
+
+    if shape.kind == "prefill":
+        cross_len = shape.seq_len if cfg.is_encdec else 0
+        cache_axes = bundle.cache_axes(cross_len)
+        inner = make_prefill_step(cfg, chunk=chunk)
+
+        def fn(params, batch):
+            with use_rules(mesh, rules):
+                return inner(params, batch)
+
+        # The emitted cache is laid out for DECODE consumption (kv-replicated
+        # archs get a seq-sharded cache, not a replicated one) — one reshard
+        # at the end of prefill instead of a fat replicated output.
+        dec_rules = make_rules(mesh, cfg, "decode", shape)
+        out_abs = jax.eval_shape(fn, param_abs, batch_abs)
+        tok_sh = shardings_from_axes(out_abs[0], ("batch", "seq"),
+                                     mesh, rules)
+        cache_sh = shardings_from_axes(out_abs[1], cache_axes, mesh,
+                                       dec_rules)
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                         out_shardings=(tok_sh, cache_sh))
+        return ShardedStep("prefill", jitted, (param_abs, batch_abs),
+                           rules, mesh)
+
+    # decode
+    self_len, cross_len = decode_cache_len(cfg, shape)
+    cache_abs = bundle.cache_abstract(shape.global_batch, self_len,
+                                      cross_len)
+    cache_axes = bundle.cache_axes(cross_len)
+    cache_sh = shardings_from_axes(cache_abs, cache_axes, mesh, rules)
+    inner = make_decode_step(cfg)
+
+    def fn(params, cache, tokens, cur_index):
+        with use_rules(mesh, rules):
+            return inner(params, cache, tokens, cur_index)
+
+    tok_abs = batch_abs["tokens"]
+    tok_sh = shardings_from_axes(tok_abs, ("batch", "seq"), mesh, rules)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(param_sh, cache_sh, tok_sh, replicated(mesh)),
+        out_shardings=(tok_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    return ShardedStep("decode", jitted,
+                       (param_abs, cache_abs, tok_abs, _sds_i32()),
+                       rules, mesh)

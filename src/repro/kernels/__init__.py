@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the serving hot paths.
+
+* flash_attention — prefill/train attention (causal + sliding-window +
+  logit softcap), online softmax, VMEM-tiled via BlockSpec.
+* flash_decode — one-token decode against a (possibly ring) KV cache,
+  blocked over sequence with an online-softmax accumulator.
+* ssd_scan — Mamba2 state-space-duality chunk scan (intra-chunk einsums +
+  sequential inter-chunk state carry in VMEM scratch).
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit'd wrapper in
+ops.py; tests sweep shapes/dtypes in interpret mode (this container is
+CPU-only — TPU is the compile target, interpret mode validates semantics).
+"""

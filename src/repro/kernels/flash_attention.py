@@ -1,0 +1,120 @@
+"""Flash attention Pallas TPU kernel.
+
+Layout: q/k/v flattened to (BH, S, D) — the ops.py wrapper handles GQA
+expansion and head flattening. Grid (BH, nq, nk), kv innermost; running
+(m, l, acc) in VMEM scratch; out written on the last kv block.
+
+Block shapes are MXU-aligned (multiples of 128 on the lane dim; D is the
+head dim, 64..256 for all assigned archs). Causal blocks strictly above the
+diagonal are skipped with pl.when (real compute savings on TPU, where the
+grid is executed sequentially per core).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, cap: float, kv_len: int,
+            block_q: int, block_k: int, scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    first_q = i * block_q
+    first_k = j * block_k
+    # causal: whole block above the diagonal contributes nothing
+    live = (not causal) or (first_k <= first_q + block_q - 1)
+    # sliding window: whole block left of every query's window is dead
+    if window:
+        live_w = first_q - (first_k + block_k - 1) < window
+    else:
+        live_w = True
+
+    @pl.when(jnp.logical_and(live, live_w))
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale         # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        qpos = first_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = first_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(j == nk - 1)
+    def _out():
+        denom = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         cap: float = 0.0, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = True):
+    """q (BH, Sq, D); k, v (BH, Skv, D) -> (BH, Sq, D)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+
+    kern = functools.partial(
+        _kernel, causal=causal, window=window, cap=cap, kv_len=Skv,
+        block_q=block_q, block_k=block_k, scale=D ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_p, D), q.dtype),
+        grid=(BH, Sq_p // block_q, Skv_p // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,102 @@
+"""Flash-decode Pallas TPU kernel: one new token against a KV cache.
+
+The serving hot path (DECODE actions). Memory-bound: each step streams the
+cache HBM->VMEM once; the kernel's job is to keep that stream dense and fuse
+the online softmax so nothing round-trips. Supports ring-buffer caches via an
+explicit per-slot absolute-position array `kpos` (positions < 0 = invalid),
+a current index, and a sliding window — exactly the masking semantics of
+`repro.models.attention.attend_decode` (the oracle).
+
+Layout: q (BK, G, D); k, v (BK, S, D); kpos (S,). BK = batch x kv-heads,
+G = q-heads-per-kv-head (ops.py reshapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(cur_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, cap: float,
+            block_s: int, scale: float):
+    j = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale             # (G, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bs, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    kpos = kpos_ref[...]                                 # (bs,)
+    valid = (kpos >= 0) & (kpos <= cur)
+    if window:
+        valid &= kpos > cur - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(j == ns - 1)
+    def _out():
+        denom = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode_bkgd(q, k, v, kpos, cur_index, *, window: int = 0,
+                      cap: float = 0.0, block_s: int = 256,
+                      interpret: bool = True):
+    """q (BK, G, D); k, v (BK, S, D); kpos (S,) -> (BK, G, D)."""
+    BK, G, D = q.shape
+    S = k.shape[1]
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    Sp = S + pad
+    cur = jnp.asarray(cur_index, jnp.int32).reshape(1)
+
+    kern = functools.partial(_kernel, window=window, cap=cap,
+                             block_s=block_s, scale=D ** -0.5)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((BK, G, D), q.dtype),
+        grid=(BK, Sp // block_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_s, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((block_s,), lambda b, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur, q, k, v, kpos)

@@ -1,0 +1,68 @@
+"""Jit'd convenience wrappers over the Pallas kernels.
+
+These accept model-layout tensors (B, S, H/K/G, D) and handle flattening,
+GQA expansion, and (on CPU) interpret-mode execution. On TPU, pass
+``interpret=False`` — the pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_decode import flash_decode_bkgd
+from repro.kernels.ssd_scan import ssd_scan_bh
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    block_q=128, block_k=128, interpret=True):
+    """q (B,Sq,H,D); k,v (B,Skv,K,D) with H = K*G -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    if K != H:                       # GQA: expand kv heads
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               cap=cap, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("window", "cap", "block_s", "interpret"))
+def flash_decode(q, k, v, kpos, cur_index, *, window=0, cap=0.0,
+                 block_s=256, interpret=True):
+    """q (B,1,H,D); k,v (B,S,K,D); kpos (S,) -> (B,1,H,D)."""
+    B, _, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.reshape(B, K, G, D).reshape(B * K, G, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    out = flash_decode_bkgd(qf, kf, vf, kpos, cur_index, window=window,
+                            cap=cap, block_s=block_s, interpret=interpret)
+    return out.reshape(B, K * G, D)[:, None]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, bmat, cmat, *, chunk=128, interpret=True):
+    """Model layout: x (B,L,H,P); dt (B,L,H); a (H,); b/c (B,L,N).
+
+    Returns (y (B,L,H,P), state (B,H,P,N))."""
+    B, L, H, P = x.shape
+    N = bmat.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, L)
+    af = jnp.tile(a, B)
+    bf = jnp.broadcast_to(bmat[:, None], (B, H, L, N)).reshape(B * H, L, N)
+    cf = jnp.broadcast_to(cmat[:, None], (B, H, L, N)).reshape(B * H, L, N)
+    y, state = ssd_scan_bh(xf, dtf, af, bf, cf, chunk=chunk,
+                           interpret=interpret)
+    return (y.reshape(B, H, L, P).transpose(0, 2, 1, 3),
+            state.reshape(B, H, P, N))

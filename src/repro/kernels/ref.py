@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every kernel (the ground truth tests compare to)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF
+from repro.models.ssm import ssd_reference  # noqa: F401  (ssd oracle)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        cap: float = 0.0):
+    """q (BH, Sq, D); k, v (BH, Skv, D) — full-scores reference."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * D ** -0.5,
+                   k.astype(jnp.float32))
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    Sq, Skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+def flash_decode_ref(q, k, v, kpos, cur_index, *, window: int = 0,
+                     cap: float = 0.0):
+    """q (BK, G, D); k, v (BK, S, D); kpos (S,)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32) * D ** -0.5,
+                   k.astype(jnp.float32))
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    valid = (kpos >= 0) & (kpos <= cur_index)
+    if window:
+        valid &= kpos > cur_index - window
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bgs,bsd->bgd", p.astype(v.dtype), v)

@@ -1,0 +1,106 @@
+"""Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+Per (batch, head): intra-chunk attention-like einsums on the MXU (QxQ decay-
+masked score matrix) + a sequential inter-chunk state recurrence carried in
+VMEM scratch — the TPU-native shape of the SSD algorithm (chunk dims are
+MXU-aligned; the recurrence touches only the (P, N) state, which never
+leaves VMEM between chunks).
+
+Layout: x (BH, L, P); dt (BH, L); a (BH,); bmat/cmat (BH, L, N).
+Outputs: y (BH, L, P), final state (BH, P, N) fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref,
+            state_ref, *, chunk: int):
+    c_idx = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0].astype(jnp.float32)                      # scalar (negative)
+    dt = dt_ref[0].astype(jnp.float32)                    # (Q,)
+    x = x_ref[0].astype(jnp.float32)                      # (Q, P)
+    bm = b_ref[0].astype(jnp.float32)                     # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                     # (Q, N)
+
+    dA = dt * a                                           # (Q,) log-decay
+    cum = jnp.cumsum(dA)                                  # (Q,)
+    xdt = x * dt[:, None]                                 # (Q, P)
+
+    # intra-chunk: scores (Q, Q) with decay mask
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    rel = cum[:, None] - cum[None, :]                     # (Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (cum.shape[0],) * 2, 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (cum.shape[0],) * 2, 1)
+    lmat = jnp.where(qi >= ki, jnp.exp(rel), 0.0)
+    w = scores * lmat
+    y_intra = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the incoming state
+    s_in = state_ref[...]                                 # (P, N)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, s_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (Q, P)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S' = T * S_in + sum_s to_end[s] * xdt[s] (x) b[s]
+    to_end = jnp.exp(cum[-1] - cum)                       # (Q,)
+    s_chunk = jax.lax.dot_general((xdt * to_end[:, None]), bm,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(cum[-1]) * s_in + s_chunk    # (P, N)
+
+    @pl.when(c_idx == nc - 1)
+    def _emit_state():
+        s_out_ref[0] = state_ref[...]
+
+
+def ssd_scan_bh(x, dt, a, bmat, cmat, *, chunk: int = 128,
+                interpret: bool = True):
+    """x (BH, L, P); dt (BH, L); a (BH,); bmat/cmat (BH, L, N)."""
+    BH, L, P = x.shape
+    N = bmat.shape[-1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:          # dt=0 on the tail: decay 1, zero input, state unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((BH, Lp, P), x.dtype),
+                   jax.ShapeDtypeStruct((BH, P, N), jnp.float32)),
+        grid=(BH, Lp // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, P, N), lambda b, c: (b, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)
+    return y[:, :L], state

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory / cost / collective analysis.
+
+This is the proof (without hardware) that the distribution config is
+coherent: sharding mismatches, compile-time OOM, or unsupported collectives
+all fail here. Run one cell per process (compilation state is large):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b \
+        --shape decode_32k --mesh single --out experiments/dryrun
+
+or everything serially with --all (slow; the driver script
+`experiments/run_dryrun.sh` fans out subprocesses).
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.configs.base import shape_applicable
+from repro.distributed.sharding import shardings_for
+from repro.distributed.steps import build_sharded_step
+from repro.launch.mesh import make_production_mesh
+from repro.models import params as pspec
+from repro.models.registry import get_bundle
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(?:\(.*?\)|[a-z0-9]+\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^(]*\(", )
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device collective ops with operand-byte estimates.
+
+    Result-shape bytes come from the HLO line; operand bytes are derived per
+    op kind (all-gather result = operand x group; reduce-scatter inverse)."""
+    ops = []
+    for line in hlo_text.splitlines():
+        m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start|-done)?\(", line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        if m.group(2) == "-done":
+            continue  # counted at -start
+        lhs = line.split("=", 1)[0] + "= " + line.split("=", 1)[1]
+        shapes = SHAPE_RE.findall(line.split(m.group(0))[0])
+        if not shapes:
+            continue
+        result_bytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = GROUPS_RE.search(line)
+        group = int(g.group(2)) if g else 1
+        if kind == "all-gather":
+            operand = result_bytes // max(group, 1)
+            wire = result_bytes - operand            # (g-1)/g of result
+        elif kind == "reduce-scatter":
+            operand = result_bytes * max(group, 1)
+            wire = operand - result_bytes
+        elif kind == "all-reduce":
+            operand = result_bytes
+            wire = 2 * result_bytes * (group - 1) // max(group, 1)
+        elif kind == "all-to-all":
+            operand = result_bytes
+            wire = result_bytes * (group - 1) // max(group, 1)
+        else:  # collective-permute
+            operand = result_bytes
+            wire = result_bytes
+        ops.append({"kind": kind, "result_bytes": result_bytes,
+                    "operand_bytes": operand, "wire_bytes": wire,
+                    "group": group})
+    return ops
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, scan_hlo: bool = True,
+             chunk: int = 1024):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(pure full-attention arch; DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    step = build_sharded_step(cfg, mesh, shape, chunk=chunk)
+    lowered = step.jitted.lower(*step.abstract)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    # loop-aware totals: cost_analysis counts while bodies ONCE; every layer
+    # stack here is a scan, so flops/bytes/collectives must be multiplied
+    # through the loop nest (repro.launch.hloparse, verified vs unrolled).
+    from repro.launch import hloparse
+    looped = hloparse.analyze(hlo)
+
+    # XLA:CPU cannot matmul bf16 natively; FloatNormalization hoists an fp32
+    # twin of every bf16 matmul weight out of the layer loop (verified via
+    # buffer-assignment dumps — EXPERIMENTS.md §Dry-run). On TPU the MXU is
+    # bf16-native and these twins do not exist, so we report a TPU-adjusted
+    # peak alongside the raw CPU-backend number.
+    bundle = get_bundle(cfg)
+    p_spec = bundle.spec()
+    p_shard = shardings_for(p_spec, mesh, step.rules)
+    upcast = 0
+    import jax.numpy as jnp
+    for ps, sh in zip(pspec._spec_leaves(p_spec),
+                      pspec._spec_leaves(p_shard)):
+        if ps.dtype == jnp.bfloat16 and len(ps.shape) >= 2:
+            local = sh.shard_shape(tuple(ps.shape))
+            upcast += int(np.prod(local)) * 4
+    if shape.kind == "train":
+        # fp32 twin of the remat carry stack (verified in gemma2 dump):
+        # n_groups x (B/dp/microbatch) x S x d per stack (enc+dec if encdec)
+        dp = 1
+        for a in step.rules.get("batch", ()):
+            dp *= mesh.shape.get(a, 1)
+        n_mb = max(1, min(cfg.microbatches, shape.global_batch // max(dp, 1)))
+        b_mb = max(1, shape.global_batch // max(dp, 1) // n_mb)
+        groups = cfg.num_layers // max(len(cfg.pattern), 1)
+        if cfg.is_encdec:
+            groups += cfg.enc_layers
+        seq_div = (mesh.shape.get("model", 1)
+                   if cfg.seq_shard_train else 1)
+        upcast += (groups * b_mb * shape.seq_len * cfg.d_model * 4
+                   // seq_div)
+
+    by_kind = {}
+    for op in colls:
+        k = op["kind"]
+        e = by_kind.setdefault(k, {"count": 0, "operand_bytes": 0,
+                                   "wire_bytes": 0})
+        e["count"] += 1
+        e["operand_bytes"] += op["operand_bytes"]
+        e["wire_bytes"] += op["wire_bytes"]
+
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok",
+        "mode": step.rules.get("_mode"),
+        "devices": int(len(mesh.devices.flatten())),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": (mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes),
+            "cpu_bf16_upcast_artifact": upcast,
+            "peak_tpu_estimate": (mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes - upcast),
+        },
+        "cost": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+        },
+        "looped": {   # loop-nest-corrected per-device totals (hloparse)
+            "flops": looped["flops"],
+            "hbm_bytes": looped["hbm_bytes"],
+            "coll_operand_bytes": looped["coll_operand"],
+            "coll_wire_bytes": looped["coll_wire"],
+            "coll_count": looped["coll_count"],
+        },
+        "collectives": by_kind,
+        "collective_operand_bytes": sum(o["operand_bytes"] for o in colls),
+        "collective_wire_bytes": sum(o["wire_bytes"] for o in colls),
+        "hlo_bytes": len(hlo),
+    }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--chunk", type=int, default=1024)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                for m in ("single", "multi"):
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    os.makedirs(args.out, exist_ok=True)
+    ok = True
+    for arch, shape, meshk in cells:
+        tag = f"{arch}__{shape}__{meshk}"
+        try:
+            res = run_cell(arch, shape, meshk, chunk=args.chunk)
+        except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+            res = {"arch": arch, "shape": shape, "mesh": meshk,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            ok = False
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" peak/dev={res['memory']['peak_per_device']/2**30:.2f}GiB"
+                     f" flops={res['cost']['flops']:.3e}"
+                     f" coll={res['collective_wire_bytes']/2**20:.1f}MiB"
+                     f" compile={res['compile_s']}s")
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

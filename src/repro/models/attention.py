@@ -1,0 +1,235 @@
+"""GQA attention: full/sliding-window, chunked (flash-style) prefill, cached
+decode, cross-attention. Works under both TP modes (see distributed/sharding).
+
+Memory note: prefill at 32k tokens cannot materialize (Sq, Skv) scores, so the
+XLA path scans over KV chunks with an online softmax (the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU production path; this module is
+the semantically identical pure-XLA fallback the dry-run lowers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain, current_mesh_rules
+from repro.models.flash_xla import flash_attention_xla
+from repro.models.layers import rope, softcap
+from repro.models.params import ParamSpec
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attn_spec(cfg: ModelConfig, cross: bool = False):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "w_q": ParamSpec((d, h, hd), ("d_model_tp", "heads", "head_dim")),
+        "w_k": ParamSpec((d, k, hd), ("d_model_tp", "kv_heads", "head_dim")),
+        "w_v": ParamSpec((d, k, hd), ("d_model_tp", "kv_heads", "head_dim")),
+        "w_o": ParamSpec((h, hd, d), ("heads_o", "head_dim", "d_model_out")),
+    }
+    if cfg.qkv_bias:
+        s["b_q"] = ParamSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        s["b_k"] = ParamSpec((k, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["b_v"] = ParamSpec((k, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _project_qkv(p, x, x_kv=None, positions=None, kv_positions=None,
+                 theta: float = 10000.0, use_rope: bool = True):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhx->bshx", x, p["w_q"])
+    k = jnp.einsum("bsd,dkx->bskx", x_kv, p["w_k"])
+    v = jnp.einsum("bsd,dkx->bskx", x_kv, p["w_v"])
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    if use_rope:
+        q = rope(q, positions, theta)
+        k = rope(k, kv_positions if kv_positions is not None else positions,
+                 theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _should_expand_kv(cfg: ModelConfig) -> bool:
+    """Expand KV to full heads when heads are mesh-sharded but KV heads are
+    not shardable (heads mode with kv_heads not divisible)."""
+    mesh, rules = current_mesh_rules()
+    if rules is None:
+        return False
+    return rules.get("_mode") == "heads" and not rules.get("kv_heads")
+
+
+def _context_segments() -> int:
+    """Segment count for the combine-once context-parallel flash: the
+    model-axis size when context mode shards the KV sequence."""
+    mesh, rules = current_mesh_rules()
+    if mesh is None or rules is None or rules.get("_mode") != "context":
+        return 0
+    return int(mesh.shape.get("model", 0))
+
+
+def _mask(qpos, kpos, *, causal: bool, window: int):
+    """Additive mask (B,1,1,Sq,Skv). qpos (B,Sq); kpos (Skv,)."""
+    d = qpos[:, :, None] - kpos[None, None, :]        # (B,Sq,Skv)
+    m = (kpos >= 0)[None, None, :] & jnp.ones_like(d, bool)
+    if causal:
+        m &= d >= 0
+    if window:
+        m &= d < window
+    add = jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+    return add[:, None, None]                          # (B,1,1,Sq,Skv)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int, cap: float):
+    """Reference attention materializing full scores (tests/small inputs).
+
+    q (B,Sq,K,G,D); k,v (B,Skv,K,D)."""
+    B, Sq, K, G, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", (q * D ** -0.5).astype(q.dtype), k
+                   ).astype(jnp.float32)
+    s = softcap(s, cap)
+    qpos = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    s = s + _mask(qpos, jnp.arange(Skv), causal=causal, window=window)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int, cap: float,
+                      chunk: int = 1024, kv_dim_is_heads: bool = False):
+    """Memory-bounded attention: flash_xla custom-vjp path (segmented
+    combine-once variant under context-parallel sharding)."""
+    return flash_attention_xla(q, k, v, causal=causal, window=window,
+                               cap=cap, chunk=chunk,
+                               kv_dim_is_heads=kv_dim_is_heads,
+                               segments=_context_segments())
+
+
+def attend_full(p, cfg: ModelConfig, x, *, kind: str, positions,
+                x_kv=None, kv_positions=None, cross: bool = False,
+                causal: bool = True, chunk: int = 1024):
+    """Training / prefill attention. Returns (y, (k, v)) — k/v post-RoPE,
+    unexpanded, for cache construction."""
+    q, k, v = _project_qkv(p, x, x_kv=x_kv, positions=positions,
+                           kv_positions=kv_positions,
+                           theta=cfg.rope_theta, use_rope=not cross)
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    is_causal = causal and not cross
+    if _should_expand_kv(cfg):
+        ke = jnp.repeat(k, H // K, axis=2)
+        ve = jnp.repeat(v, H // K, axis=2)
+        qg = q[:, :, :, None, :]               # (B,S,H,1,D)
+        out = chunked_attention(
+            qg, ke, ve,
+            causal=is_causal, window=cfg.window if kind == "local" else 0,
+            cap=cfg.attn_softcap, chunk=chunk, kv_dim_is_heads=True)
+        y = out.reshape(B, Sq, H, D)
+    else:
+        qg = q.reshape(B, Sq, K, H // K, D)
+        out = chunked_attention(
+            qg, k, v,
+            causal=is_causal, window=cfg.window if kind == "local" else 0,
+            cap=cfg.attn_softcap, chunk=chunk)
+        y = out.reshape(B, Sq, H, D)
+    y = constrain(y, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshx,hxd->bsd", y, p["w_o"])
+    return constrain(y, "batch", "seq", "d_model"), (k, v)
+
+
+def make_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Abstract/zero cache for one attention layer."""
+    W = cfg.window if (kind == "local" and cfg.sliding_kv and cfg.window) else 0
+    S = min(max_len, W) if W else max_len
+    shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_axes():
+    return ("batch", "seq_kv", "kv_heads", "head_dim")
+
+
+def prefill_into_cache(cfg: ModelConfig, kind: str, k, v, max_len: int):
+    """Build a decode cache from prefill K/V (ring-packed for local layers)."""
+    B, S, K, D = k.shape
+    W = cfg.window if (kind == "local" and cfg.sliding_kv and cfg.window) else 0
+    cap = min(max_len, W) if W else max_len
+    if S == cap:
+        return {"k": k, "v": v}
+    if S > cap:                       # keep last `cap`, ring-packed
+        shift = (S - cap) % cap
+        kk = jnp.roll(k[:, S - cap:], shift, axis=1)
+        vv = jnp.roll(v[:, S - cap:], shift, axis=1)
+        return {"k": kk, "v": vv}
+    pad = ((0, 0), (0, cap - S), (0, 0), (0, 0))
+    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+
+
+def attend_decode(p, cfg: ModelConfig, x, cache, cur_index, *, kind: str,
+                  cross: bool = False):
+    """One-token decode. x (B,1,d). Returns (y, new_cache)."""
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    q = jnp.einsum("bsd,dhx->bshx", x, p["w_q"])
+    if "b_q" in p:
+        q = q + p["b_q"]
+    if not cross:
+        q = rope(q, pos, cfg.rope_theta)
+    H, D = q.shape[2], q.shape[3]
+    K = cfg.n_kv_heads
+
+    k_all, v_all = cache["k"], cache["v"]
+    S = k_all.shape[1]
+    W = cfg.window if (kind == "local" and cfg.sliding_kv and cfg.window) else 0
+
+    if cross:
+        new_cache = cache
+        kpos = jnp.arange(S)
+        window = 0
+        causal = False
+    else:
+        k_new = jnp.einsum("bsd,dkx->bskx", x, p["w_k"])
+        v_new = jnp.einsum("bsd,dkx->bskx", x, p["w_v"])
+        if "b_k" in p:
+            k_new, v_new = k_new + p["b_k"], v_new + p["b_v"]
+        k_new = rope(k_new, pos, cfg.rope_theta).astype(k_all.dtype)
+        v_new = v_new.astype(v_all.dtype)
+        slot = jnp.mod(cur_index, S) if (W and S == W) else cur_index
+        k_all = jax.lax.dynamic_update_slice(k_all, k_new, (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(v_all, v_new, (0, slot, 0, 0))
+        k_all = constrain(k_all, *cache_axes())
+        v_all = constrain(v_all, *cache_axes())
+        new_cache = {"k": k_all, "v": v_all}
+        if W and S == W:              # ring buffer: absolute pos per slot
+            j = jnp.arange(S)
+            kpos = cur_index - jnp.mod(cur_index - j, S)
+        else:
+            kpos = jnp.arange(S)
+        window = W
+        causal = True
+
+    qg = (q * (D ** -0.5)).reshape(B, 1, K, H // K, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_all).astype(jnp.float32)
+    s = softcap(s, cfg.attn_softcap)
+    mask = kpos <= cur_index if causal else jnp.ones_like(kpos, bool)
+    if window:
+        mask &= kpos > cur_index - window
+    if not cross:
+        mask &= kpos >= 0
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    s = constrain(s, "batch", "kv_heads", "heads", "seq", "seq_kv")
+    m = s.max(axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    w = e / e.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v_all.dtype), v_all)
+    y = out.reshape(B, 1, H, D)
+    y = jnp.einsum("bshx,hxd->bsd", y, p["w_o"])
+    return constrain(y, "batch", "seq", "d_model"), new_cache

@@ -1,0 +1,52 @@
+"""Encoder-decoder wrapper (seamless-m4t): bidirectional encoder over stub
+audio-frame embeddings + causal decoder with cross-attention."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def encoder_config(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, num_layers=cfg.enc_layers,
+                               is_encdec=False, moe=None)
+
+
+def encdec_spec(cfg: ModelConfig):
+    enc = lm.model_spec(encoder_config(cfg))
+    enc.pop("embed")
+    dec = lm.model_spec(cfg, cross=True)
+    return {"encoder": enc, "decoder": dec}
+
+
+def train_logits(params, cfg: ModelConfig, frames, dec_tokens,
+                 chunk: int = 1024):
+    enc_cfg = encoder_config(cfg)
+    enc_out = lm.encode(params["encoder"], enc_cfg, frames, chunk=chunk)
+    B, Se = enc_out.shape[:2]
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    logits, _ = lm.forward(params["decoder"], cfg, mode="train",
+                           tokens=dec_tokens, enc_out=enc_out,
+                           enc_positions=enc_pos, chunk=chunk)
+    return logits
+
+
+def prefill(params, cfg: ModelConfig, frames, dec_tokens, chunk: int = 1024,
+            cache_len=None):
+    enc_cfg = encoder_config(cfg)
+    enc_out = lm.encode(params["encoder"], enc_cfg, frames, chunk=chunk)
+    B, Se = enc_out.shape[:2]
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    logits, cache = lm.forward(params["decoder"], cfg, mode="prefill",
+                               tokens=dec_tokens, enc_out=enc_out,
+                               enc_positions=enc_pos, chunk=chunk,
+                               cache_len=cache_len)
+    return logits, cache
+
+
+def decode(params, cfg: ModelConfig, cache, tokens, cur_index):
+    return lm.forward(params["decoder"], cfg, mode="decode", tokens=tokens,
+                      cache=cache, cur_index=cur_index)

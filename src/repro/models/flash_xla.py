@@ -1,0 +1,339 @@
+"""Flash attention at the XLA level: chunked online-softmax forward +
+custom_vjp backward that recomputes per-chunk scores.
+
+Why it exists: a naive (Sq, Skv) score materialization is impossible at 32k
+(17 GB/chip), and differentiating a chunked scan stores O(Sq x Skv) residuals
+anyway. This implementation keeps residuals at O(S·d): (q, k, v, out, lse) —
+the standard flash decomposition — expressed in pure XLA so the 512-device
+dry-run lowers it. The Pallas kernel (repro.kernels.flash_attention) is the
+TPU production path; this is the semantically identical fallback and the
+kernel's oracle is checked against it.
+
+Layout: q (B, Sq, K, G, D); k, v (B, Skv, K, D). K = kv heads, G = q-per-kv.
+Positions are implicit (q token i at position i), matching train/prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _mask_chunk(sq: int, kpos, *, causal: bool, window: int):
+    """Additive mask (Sq, C) for kv chunk with absolute positions kpos."""
+    qpos = jnp.arange(sq)
+    d = qpos[:, None] - kpos[None, :]
+    m = (kpos >= 0)[None, :] | jnp.zeros((sq, 1), bool)
+    if causal:
+        m &= d >= 0
+    if window:
+        m &= d < window
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _pad_kv(k, v, chunk):
+    skv = k.shape[1]
+    kpos = jnp.arange(skv)
+    if skv % chunk:
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    return k, v, kpos
+
+
+def _fwd_impl(q, k, v, *, causal, window, cap, chunk,
+              axes=("batch", "kv_heads", "heads", "seq", "seq_kv")):
+    B, Sq, K, G, D = q.shape
+    skv0 = k.shape[1]
+    chunk = min(chunk, skv0)
+    k, v, kpos = _pad_kv(k, v, chunk)
+    Skv = k.shape[1]
+    nc = Skv // chunk
+    scale = D ** -0.5
+    qs = (q * scale).astype(q.dtype)
+
+    kc = k.reshape(B, nc, chunk, K, D).swapaxes(0, 1)
+    vc = v.reshape(B, nc, chunk, K, D).swapaxes(0, 1)
+    pc = kpos.reshape(nc, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qs, k_i).astype(jnp.float32)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        s = s + _mask_chunk(Sq, p_i, causal=causal, window=window
+                            )[None, None, None]
+        s = constrain(s, *axes)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_i.dtype), v_i)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    lse = m + jnp.log(jnp.maximum(l, 1e-37))
+    out = acc / jnp.maximum(l, 1e-37).transpose(0, 3, 1, 2)[..., None]
+    return out.astype(q.dtype), lse
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, cap: float, chunk: int,
+                axes=("batch", "kv_heads", "heads", "seq", "seq_kv")):
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _ = _fwd_impl(q, k, v, causal=causal, window=window, cap=cap,
+                           chunk=chunk, axes=axes)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _fwd_impl(q, k, v, causal=causal, window=window, cap=cap,
+                             chunk=chunk, axes=axes)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        B, Sq, K, G, D = q.shape
+        skv0 = k.shape[1]
+        ch = min(chunk, skv0)
+        kp, vp, kpos = _pad_kv(k, v, ch)
+        Skv = kp.shape[1]
+        nc = Skv // ch
+        scale = D ** -0.5
+        qs = (q * scale).astype(q.dtype)
+        # D_i = rowsum(dout * out): (B,K,G,Sq)
+        delta = jnp.einsum("bqkgd,bqkgd->bkgq", dout.astype(jnp.float32),
+                           out.astype(jnp.float32))
+
+        kc = kp.reshape(B, nc, ch, K, D).swapaxes(0, 1)
+        vc = vp.reshape(B, nc, ch, K, D).swapaxes(0, 1)
+        pc = kpos.reshape(nc, ch)
+
+        def body(dq, xs):
+            k_i, v_i, p_i = xs
+            s_pre = jnp.einsum("bqkgd,bskd->bkgqs", qs, k_i
+                               ).astype(jnp.float32)
+            if cap:
+                t = jnp.tanh(s_pre / cap)
+                s = cap * t
+            else:
+                s = s_pre
+            s = s + _mask_chunk(Sq, p_i, causal=causal, window=window
+                                )[None, None, None]
+            s = constrain(s, *axes)
+            p = jnp.exp(s - lse[..., None])          # (B,K,G,Sq,C)
+            dv_i = jnp.einsum("bkgqs,bqkgd->bskd", p.astype(dout.dtype),
+                              dout)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dout, v_i
+                            ).astype(jnp.float32)
+            ds = p * (dp - delta[..., None])
+            if cap:
+                ds = ds * (1.0 - t * t)
+            ds = constrain(ds, *axes)
+            ds = ds.astype(q.dtype)
+            dq_i = jnp.einsum("bkgqs,bskd->bqkgd", ds, k_i)
+            dk_i = jnp.einsum("bkgqs,bqkgd->bskd", ds, qs)
+            return dq + dq_i.astype(jnp.float32), (dk_i, dv_i)
+
+        dq0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+        dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kc, vc, pc))
+        # dk_i was computed against qs = q*scale, so it is already scaled;
+        # dq still needs the chain factor for s = (q*scale)·k.
+        dk = dk_c.swapaxes(0, 1).reshape(B, Skv, K, D)[:, :skv0]
+        dv = dv_c.swapaxes(0, 1).reshape(B, Skv, K, D)[:, :skv0]
+        dq = (dq * scale).astype(q.dtype)
+        return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def _seg_fwd(q, k, v, *, causal, window, cap, chunk, nseg):
+    """Segmented context-parallel flash forward.
+
+    k, v reshaped (B, nseg, S_loc, K, D) with the segment dim sharded over
+    the model axis: every partial-softmax update inside the chunk scan is
+    segment-local (zero communication); the single cross-segment merge at
+    the end is the only collective — one all-reduce per layer instead of
+    one per KV chunk (EXPERIMENTS.md §Perf, context-attention iteration).
+    """
+    B, Sq, K, G, D = q.shape
+    Skv = k.shape[1]
+    s_loc = Skv // nseg
+    ch = min(chunk, s_loc)
+    # cap the live fp32 score block (B,1,K,G,Sq,ch) around ~1 GiB/device:
+    # the segment dim shards over the mesh but the chunk width does not
+    while ch > 16 and B * K * G * Sq * ch * 4 > 1.5e9 * nseg:
+        ch //= 2
+    assert s_loc % ch == 0, (s_loc, ch)
+    nc = s_loc // ch
+    scale = D ** -0.5
+    qs = (q * scale).astype(q.dtype)
+    kseg = constrain(k.reshape(B, nseg, s_loc, K, D),
+                     "batch", "kv_seg", None, "kv_heads", "head_dim")
+    vseg = constrain(v.reshape(B, nseg, s_loc, K, D),
+                     "batch", "kv_seg", None, "kv_heads", "head_dim")
+    kc = kseg.reshape(B, nseg, nc, ch, K, D).transpose(2, 0, 1, 3, 4, 5)
+    vc = vseg.reshape(B, nseg, nc, ch, K, D).transpose(2, 0, 1, 3, 4, 5)
+    qpos = jnp.arange(Sq)
+    # absolute positions per (segment, chunk-step, in-chunk)
+    segpos = (jnp.arange(nseg)[:, None] * s_loc)        # (nseg, 1)
+
+    def body(carry, xs):
+        m, l, acc = carry                    # (B,nseg,K,G,Sq) / (...,Sq,D)
+        k_i, v_i, ci = xs                    # (B,nseg,ch,K,D), step index
+        s = jnp.einsum("bqkgd,bEskd->bEkgqs", qs, k_i).astype(jnp.float32)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        kpos = segpos + ci * ch + jnp.arange(ch)[None, :]   # (nseg, ch)
+        dpos = qpos[None, :, None] - kpos[:, None, :]       # (nseg,Sq,ch)
+        mask = jnp.ones_like(dpos, bool)
+        if causal:
+            mask &= dpos >= 0
+        if window:
+            mask &= dpos < window
+        s = s + jnp.where(mask, 0.0, NEG_INF
+                          )[None, :, None, None].astype(jnp.float32)
+        s = constrain(s, "batch", "kv_seg", "kv_heads", "heads", "seq",
+                      "seq_kv")
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bEkgqs,bEskd->bEqkgd", p.astype(v_i.dtype), v_i)
+        corr_t = corr.transpose(0, 1, 4, 2, 3)[..., None]
+        # accumulate in the input dtype: per-segment accumulators are
+        # (B,nseg,Sq,K,G,D)-sized — fp32 doubles a multi-GiB live buffer
+        # for <=2 chunk-steps of accumulation per segment
+        acc_new = (acc.astype(jnp.float32) * corr_t
+                   + pv.astype(jnp.float32)).astype(acc.dtype)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nseg, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nseg, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, nseg, Sq, K, G, D), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nc)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-37))        # (B,nseg,K,G,Sq)
+    # single cross-segment merge (the only collective)
+    lse_tot = jax.nn.logsumexp(lse, axis=1)         # (B,K,G,Sq)
+    w = jnp.exp(lse - lse_tot[:, None])             # (B,nseg,K,G,Sq)
+    norm = (acc.astype(jnp.float32)
+            / jnp.maximum(l, 1e-37).transpose(0, 1, 4, 2, 3)[..., None]
+            ).astype(q.dtype)
+    out = jnp.einsum("bEkgq,bEqkgd->bqkgd", w.astype(q.dtype), norm)
+    return out.astype(q.dtype), lse_tot
+
+
+@functools.lru_cache(maxsize=None)
+def _make_seg_flash(causal: bool, window: int, cap: float, chunk: int,
+                    nseg: int):
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _ = _seg_fwd(q, k, v, causal=causal, window=window, cap=cap,
+                          chunk=chunk, nseg=nseg)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _seg_fwd(q, k, v, causal=causal, window=window, cap=cap,
+                            chunk=chunk, nseg=nseg)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        B, Sq, K, G, D = q.shape
+        Skv = k.shape[1]
+        s_loc = Skv // nseg
+        ch = min(chunk, s_loc)
+        while ch > 16 and B * K * G * Sq * ch * 4 > 1.5e9 * nseg:
+            ch //= 2
+        nc = s_loc // ch
+        scale = D ** -0.5
+        qs = (q * scale).astype(q.dtype)
+        delta = jnp.einsum("bqkgd,bqkgd->bkgq", dout.astype(jnp.float32),
+                           out.astype(jnp.float32))
+        kseg = constrain(k.reshape(B, nseg, s_loc, K, D),
+                         "batch", "kv_seg", None, "kv_heads", "head_dim")
+        vseg = constrain(v.reshape(B, nseg, s_loc, K, D),
+                         "batch", "kv_seg", None, "kv_heads", "head_dim")
+        kc = kseg.reshape(B, nseg, nc, ch, K, D).transpose(2, 0, 1, 3, 4, 5)
+        vc = vseg.reshape(B, nseg, nc, ch, K, D).transpose(2, 0, 1, 3, 4, 5)
+        qpos = jnp.arange(Sq)
+        segpos = jnp.arange(nseg)[:, None] * s_loc
+
+        def body(dq, xs):
+            k_i, v_i, ci = xs
+            s = jnp.einsum("bqkgd,bEskd->bEkgqs", qs, k_i
+                           ).astype(jnp.float32)
+            if cap:
+                t = jnp.tanh(s / cap)
+                s = cap * t
+            kpos = segpos + ci * ch + jnp.arange(ch)[None, :]
+            dpos = qpos[None, :, None] - kpos[:, None, :]
+            mask = jnp.ones_like(dpos, bool)
+            if causal:
+                mask &= dpos >= 0
+            if window:
+                mask &= dpos < window
+            s = s + jnp.where(mask, 0.0, NEG_INF
+                              )[None, :, None, None].astype(jnp.float32)
+            s = constrain(s, "batch", "kv_seg", "kv_heads", "heads", "seq",
+                          "seq_kv")
+            # lse (B,K,G,Sq) -> broadcast (B,1,K,G,Sq,1)
+            p = jnp.exp(s - lse[:, None, :, :, :, None])
+            dv_i = jnp.einsum("bEkgqs,bqkgd->bEskd", p.astype(dout.dtype),
+                              dout)
+            dp = jnp.einsum("bqkgd,bEskd->bEkgqs", dout, v_i
+                            ).astype(jnp.float32)
+            ds = p * (dp - delta[:, None, :, :, :, None])
+            if cap:
+                ds = ds * (1.0 - t * t)
+            ds = constrain(ds, "batch", "kv_seg", "kv_heads", "heads",
+                           "seq", "seq_kv").astype(q.dtype)
+            dq_i = jnp.einsum("bEkgqs,bEskd->bqkgd", ds, k_i)
+            dk_i = jnp.einsum("bEkgqs,bqkgd->bEskd", ds, qs)
+            return dq + dq_i.astype(jnp.float32), (dk_i, dv_i)
+
+        dq0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+        dq, (dk_c, dv_c) = jax.lax.scan(body, dq0,
+                                        (kc, vc, jnp.arange(nc)))
+        # (nc,B,nseg,ch,K,D) -> (B, nseg*nc*ch = Skv, K, D)
+        dk = dk_c.transpose(1, 2, 0, 3, 4, 5).reshape(B, Skv, K, D)
+        dv = dv_c.transpose(1, 2, 0, 3, 4, 5).reshape(B, Skv, K, D)
+        dq = (dq * scale).astype(q.dtype)
+        return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention_xla(q, k, v, *, causal: bool, window: int = 0,
+                        cap: float = 0.0, chunk: int = 1024,
+                        kv_dim_is_heads: bool = False, segments: int = 0):
+    """q (B,Sq,K,G,D); k,v (B,Skv,K,D) -> (B,Sq,K,G,D).
+
+    kv_dim_is_heads: the K dim holds pre-expanded full q-heads (GQA expand
+    path) — sharding labels swap so the head shards land on the right dim.
+    segments > 1: combine-once context-parallel path (segment dim sharded
+    over the model axis; one merge collective per call).
+    """
+    Skv = k.shape[1]
+    if segments > 1 and Skv % segments == 0 and Skv // segments >= 16:
+        return _make_seg_flash(bool(causal), int(window), float(cap),
+                               int(chunk), int(segments))(q, k, v)
+    axes = (("batch", "heads", "kv_heads", "seq", "seq_kv")
+            if kv_dim_is_heads else
+            ("batch", "kv_heads", "heads", "seq", "seq_kv"))
+    return _make_flash(bool(causal), int(window), float(cap),
+                       int(chunk), axes)(q, k, v)

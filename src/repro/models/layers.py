@@ -1,0 +1,129 @@
+"""Shared layers: norms, MLPs, rotary embeddings, token embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------- norms
+
+def rmsnorm_spec(d: int):
+    return {"scale": ParamSpec((d,), ("d_model",), init="zeros")}
+
+
+def rmsnorm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale): zero-init = identity
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_spec(d: int):
+    return {"scale": ParamSpec((d,), ("d_model",), init="zeros"),
+            "bias": ParamSpec((d,), ("d_model",), init="zeros")}
+
+
+def layernorm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_spec(cfg: ModelConfig, d_ff: int = 0):
+    d, ff = cfg.d_model, (d_ff or cfg.d_ff)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, ff), ("d_model", "d_ff")),
+            "w_in": ParamSpec((d, ff), ("d_model", "d_ff")),
+            "w_out": ParamSpec((ff, d), ("d_ff", "d_model")),
+        }
+    return {  # standard gelu MLP (starcoder2-style)
+        "w_in": ParamSpec((d, ff), ("d_model", "d_ff")),
+        "b_in": ParamSpec((ff,), ("d_ff",), init="zeros"),
+        "w_out": ParamSpec((ff, d), ("d_ff", "d_model")),
+        "b_out": ParamSpec((d,), ("d_model",), init="zeros"),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x):
+    if "w_gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jnp.einsum("...d,df->...f", x, p["w_in"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_in"]) + p["b_in"]
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    h = constrain(h, "batch", "seq", "d_ff")
+    y = jnp.einsum("...f,fd->...d", h, p["w_out"])
+    if "b_out" in p:
+        y = y + p["b_out"]
+    return y
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope(x, positions, theta: float):
+    """Apply rotary embedding.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq     # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x32_1 * cos - x32_2 * sin, x32_2 * cos + x32_1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+
+def embed_spec(cfg: ModelConfig):
+    s = {"embedding": ParamSpec((cfg.vocab_padded, cfg.d_model),
+                                ("vocab", "d_model"), init="embed",
+                                scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_padded),
+                                 ("d_model", "vocab"))
+    return s
+
+
+def embed(p, cfg: ModelConfig, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, "batch", "seq", "d_model")
+
+
+def unembed(p, cfg: ModelConfig, x):
+    table = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, table).astype(jnp.float32)
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    # mask padded vocab entries
+    if cfg.vocab_padded != cfg.vocab_size:
+        neg = jnp.finfo(jnp.float32).min
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(mask, logits, neg)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x

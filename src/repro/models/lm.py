@@ -1,0 +1,353 @@
+"""Decoder-only language model assembled from pattern blocks.
+
+A model is ``num_layers`` blocks laid out as a repeating ``cfg.pattern``
+(e.g. ``("local","global")`` for gemma2, ``("rec","rec","attn")`` for
+recurrentgemma, ``("ssm",)`` for mamba2). The repeating part is stacked and
+driven by ``lax.scan`` (keeps HLO size O(pattern) instead of O(layers) —
+essential for 94-layer dry-runs); leftover layers run unrolled.
+
+Three modes share one block implementation:
+  * ``train``   — full attention, no cache, remat over the scan body
+  * ``prefill`` — full attention, returns a decode-ready cache
+  * ``decode``  — one token against the cache (the serving hot path)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import params as pspec
+from repro.models.attention import (attend_decode, attend_full, attn_spec,
+                                    cache_axes, make_cache,
+                                    prefill_into_cache)
+from repro.models.layers import (embed, embed_spec, mlp, mlp_spec, rmsnorm,
+                                 rmsnorm_spec, unembed)
+from repro.models.moe import moe_apply, moe_spec
+from repro.models.rglru import (rglru_decode, rglru_full, rglru_spec,
+                                rglru_state, rglru_state_axes)
+from repro.models.ssm import (mamba_decode, mamba_full, mamba_spec,
+                              mamba_state, mamba_state_axes)
+
+ATTN_KINDS = ("attn", "local")
+
+
+# ------------------------------------------------------------------ specs
+
+def block_spec(cfg: ModelConfig, kind: str, cross: bool = False):
+    d = cfg.d_model
+    s = {"ln1": rmsnorm_spec(d)}
+    if kind in ATTN_KINDS:
+        s["attn"] = attn_spec(cfg)
+        if cross:
+            s["ln_x"] = rmsnorm_spec(d)
+            s["cross"] = attn_spec(cfg, cross=True)
+    elif kind == "ssm":
+        s["ssm"] = mamba_spec(cfg)
+    elif kind == "rec":
+        s["rec"] = rglru_spec(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        s["ln1_post"] = rmsnorm_spec(d)
+    if cfg.moe is not None:
+        s["ln2"] = rmsnorm_spec(d)
+        s["moe"] = moe_spec(cfg)
+        if cfg.moe.shared_expert:
+            s["shared"] = mlp_spec(cfg, cfg.moe.d_ff_expert)
+        if cfg.post_norms:
+            s["ln2_post"] = rmsnorm_spec(d)
+    elif cfg.mlp != "none":
+        s["ln2"] = rmsnorm_spec(d)
+        s["mlp"] = mlp_spec(cfg)
+        if cfg.post_norms:
+            s["ln2_post"] = rmsnorm_spec(d)
+    return s
+
+
+def model_spec(cfg: ModelConfig, cross: bool = False):
+    pattern, n_groups, leftover = cfg.pattern_split()
+    return {
+        "embed": embed_spec(cfg),
+        "stack": tuple(
+            pspec.stack_specs(block_spec(cfg, kind, cross), n_groups,
+                              "layers")
+            for kind in pattern),
+        "leftover": tuple(block_spec(cfg, kind, cross) for kind in leftover),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+
+
+# ------------------------------------------------------------------ caches
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                 dtype, cross_len: int = 0):
+    if kind in ATTN_KINDS:
+        c = {"kv": make_cache(cfg, kind, batch, max_len, dtype)}
+        if cross_len:
+            c["cross"] = make_cache(cfg, "attn", batch, cross_len, dtype)
+        return c
+    if kind == "ssm":
+        return {"state": mamba_state(cfg, batch, dtype)}
+    if kind == "rec":
+        return {"state": rglru_state(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def _block_cache_axes(cfg: ModelConfig, kind: str, cross_len: int = 0):
+    if kind in ATTN_KINDS:
+        c = {"kv": {"k": cache_axes(), "v": cache_axes()}}
+        if cross_len:
+            c["cross"] = {"k": cache_axes(), "v": cache_axes()}
+        return c
+    if kind == "ssm":
+        return {"state": mamba_state_axes()}
+    if kind == "rec":
+        return {"state": rglru_state_axes()}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, cross_len: int = 0):
+    pattern, n_groups, leftover = cfg.pattern_split()
+    stack = tuple(
+        jax.tree.map(
+            lambda a: jnp.zeros((n_groups,) + a.shape, a.dtype),
+            _block_cache(cfg, kind, batch, max_len, dtype, cross_len))
+        for kind in pattern)
+    left = tuple(_block_cache(cfg, kind, batch, max_len, dtype, cross_len)
+                 for kind in leftover)
+    return {"stack": stack, "leftover": left}
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, cross_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype, cross_len))
+
+
+def cache_logical_axes(cfg: ModelConfig, cross_len: int = 0):
+    """Pytree of logical-axis tuples matching init_cache structure."""
+    pattern, n_groups, leftover = cfg.pattern_split()
+
+    def is_axes(x):
+        return isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+
+    stack = tuple(
+        jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                     _block_cache_axes(cfg, kind, cross_len),
+                     is_leaf=is_axes)
+        for kind in pattern)
+    left = tuple(_block_cache_axes(cfg, kind, cross_len)
+                 for kind in leftover)
+    return {"stack": stack, "leftover": left}
+
+
+# ------------------------------------------------------------------ blocks
+
+def block_apply(p, cfg: ModelConfig, kind: str, x, *, mode: str,
+                positions=None, cur_index=None, cache=None, enc_out=None,
+                enc_positions=None, causal: bool = True, chunk: int = 1024,
+                cache_len=None):
+    """Apply one block. Returns (x, new_cache)."""
+    eps = cfg.norm_eps
+    h = rmsnorm(p["ln1"], x, eps)
+    new_cache = {}
+    if kind in ATTN_KINDS:
+        if mode == "decode":
+            y, kv = attend_decode(p["attn"], cfg, h, cache["kv"], cur_index,
+                                  kind=kind)
+            new_cache["kv"] = kv
+        else:
+            y, (k, v) = attend_full(p["attn"], cfg, h, kind=kind,
+                                    positions=positions, causal=causal,
+                                    chunk=chunk)
+            if mode == "prefill":
+                new_cache["kv"] = prefill_into_cache(
+                    cfg, kind, k, v, max_len=cache_len or k.shape[1])
+    elif kind == "ssm":
+        if mode == "decode":
+            y, st = mamba_decode(p["ssm"], cfg, h, cache["state"])
+        else:
+            y, st = mamba_full(p["ssm"], cfg, h)
+        if mode != "train":
+            new_cache["state"] = st
+    elif kind == "rec":
+        if mode == "decode":
+            y, st = rglru_decode(p["rec"], cfg, h, cache["state"])
+        else:
+            y, st = rglru_full(p["rec"], cfg, h)
+        if mode != "train":
+            new_cache["state"] = st
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        y = rmsnorm(p["ln1_post"], y, eps)
+    x = x + y
+
+    if "cross" in p:
+        h = rmsnorm(p["ln_x"], x, eps)
+        if mode == "decode":
+            y, cc = attend_decode(p["cross"], cfg, h, cache["cross"],
+                                  cur_index, kind="attn", cross=True)
+            new_cache["cross"] = cc
+        else:
+            y, (ck, cv) = attend_full(p["cross"], cfg, h, kind="attn",
+                                      positions=positions, x_kv=enc_out,
+                                      kv_positions=enc_positions, cross=True,
+                                      chunk=chunk)
+            if mode == "prefill":
+                new_cache["cross"] = {"k": ck, "v": cv}
+        x = x + y
+
+    if "moe" in p:
+        h = rmsnorm(p["ln2"], x, eps)
+        y = moe_apply(p["moe"], cfg, h)
+        if "shared" in p:
+            y = y + mlp(p["shared"], cfg, h)
+        if cfg.post_norms:
+            y = rmsnorm(p["ln2_post"], y, eps)
+        x = x + y
+    elif "mlp" in p:
+        h = rmsnorm(p["ln2"], x, eps)
+        y = mlp(p["mlp"], cfg, h)
+        if cfg.post_norms:
+            y = rmsnorm(p["ln2_post"], y, eps)
+        x = x + y
+    # residual stream between blocks: optionally sequence-sharded over the
+    # model axis (Megatron-SP) so scan-carry checkpoints shard 16x
+    return constrain(x, "batch", "seq_act", "d_model"), new_cache
+
+
+# ------------------------------------------------------------------ forward
+
+def _run_stack(params, cfg: ModelConfig, x, *, mode, positions=None,
+               cur_index=None, cache=None, enc_out=None, enc_positions=None,
+               causal=True, chunk=1024, cache_len=None):
+    pattern, n_groups, leftover = cfg.pattern_split()
+    want_cache = mode != "train"          # produce caches
+    take_cache = mode == "decode"         # consume caches
+
+    def group_body(h, xs):
+        p_group = xs[0]
+        c_group = xs[1] if take_cache else None
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            h, nc = block_apply(
+                p_group[i], cfg, kind, h, mode=mode, positions=positions,
+                cur_index=cur_index,
+                cache=(c_group[i] if c_group is not None else None),
+                enc_out=enc_out, enc_positions=enc_positions,
+                causal=causal, chunk=chunk, cache_len=cache_len)
+            new_caches.append(nc)
+        return h, tuple(new_caches) if want_cache else None
+
+    body = group_body
+    if mode == "train" and cfg.remat:
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if n_groups > 0:
+        if take_cache:
+            # Decode: the cache rides the scan CARRY and is updated in place
+            # (dynamic_update_index_in_dim). XLA aliases carry buffers through
+            # the loop — measured 17x lower temp memory than the xs/ys
+            # formulation (EXPERIMENTS.md §Perf, decode-cache iteration).
+            def decode_body(carry, xs):
+                h, cstack = carry
+                p_group, gi = xs
+                new_stack = list(cstack)
+                for i, kind in enumerate(pattern):
+                    c_i = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, gi, 0, keepdims=False), cstack[i])
+                    h, nc = block_apply(
+                        p_group[i], cfg, kind, h, mode=mode,
+                        positions=positions, cur_index=cur_index, cache=c_i,
+                        enc_out=enc_out, enc_positions=enc_positions,
+                        causal=causal, chunk=chunk, cache_len=cache_len)
+                    new_stack[i] = jax.tree.map(
+                        lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                            a, n.astype(a.dtype), gi, 0), cstack[i], nc)
+                return (h, tuple(new_stack)), None
+
+            (x, stack_caches), _ = jax.lax.scan(
+                decode_body, (x, cache["stack"]),
+                (params["stack"], jnp.arange(n_groups)))
+        else:
+            x, stack_caches = jax.lax.scan(body, x, (params["stack"],))
+    else:
+        stack_caches = tuple()
+
+    left_caches = []
+    for i, kind in enumerate(leftover):
+        c = cache["leftover"][i] if take_cache and cache else None
+        x, nc = block_apply(
+            params["leftover"][i], cfg, kind, x, mode=mode,
+            positions=positions, cur_index=cur_index, cache=c,
+            enc_out=enc_out, enc_positions=enc_positions,
+            causal=causal, chunk=chunk, cache_len=cache_len)
+        left_caches.append(nc)
+
+    new_cache = ({"stack": stack_caches, "leftover": tuple(left_caches)}
+                 if want_cache else None)
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, *, mode: str, tokens=None, embeds=None,
+            image_embeds=None, cache=None, cur_index=None, enc_out=None,
+            enc_positions=None, causal: bool = True, chunk: int = 1024,
+            cache_len=None):
+    """Returns (logits, new_cache).
+
+    * train:   logits over all positions, cache None
+    * prefill: logits for the last position only, decode-ready cache
+    * decode:  logits for the new token (B, 1, V), updated cache
+    """
+    if embeds is not None:
+        x = constrain(embeds, "batch", "seq", "d_model")
+    else:
+        x = embed(params["embed"], cfg, tokens)
+        if image_embeds is not None:
+            img = image_embeds.astype(x.dtype)
+            if cfg.scale_embed:
+                img = img * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+            x = constrain(x, "batch", "seq", "d_model")
+    B, S = x.shape[:2]
+
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    x, new_cache = _run_stack(
+        params, cfg, x, mode=mode, positions=positions, cur_index=cur_index,
+        cache=cache, enc_out=enc_out, enc_positions=enc_positions,
+        causal=causal, chunk=chunk, cache_len=cache_len)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = unembed(params["embed"], cfg, x)
+    return logits, new_cache
+
+
+def encode(params, cfg: ModelConfig, embeds, chunk: int = 1024):
+    """Bidirectional encoder pass (enc-dec models): embeds (B,S,d) -> (B,S,d)."""
+    x, _ = _run_stack(params, cfg, constrain(embeds, "batch", "seq", "d_model"),
+                      mode="train", positions=jnp.broadcast_to(
+                          jnp.arange(embeds.shape[1], dtype=jnp.int32),
+                          embeds.shape[:2]),
+                      causal=False, chunk=chunk)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def greedy_sample(logits):
+    """(B, 1, V) -> (B, 1) int32 next tokens."""
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]

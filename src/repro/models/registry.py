@@ -1,0 +1,87 @@
+"""Model bundle: one object per architecture exposing the three step
+entrypoints (train logits / prefill / decode) plus spec & cache builders.
+Family dispatch (dense / moe / ssm / hybrid / vlm / audio-encdec) happens
+here; everything downstream (steps, dry-run, serving engine) is generic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+from repro.models import params as pspec
+
+
+class Bundle:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------- parameters
+    def spec(self):
+        if self.cfg.is_encdec:
+            return encdec.encdec_spec(self.cfg)
+        return lm.model_spec(self.cfg)
+
+    def init(self, rng):
+        return pspec.materialize(self.spec(), rng)
+
+    def abstract_params(self):
+        return pspec.abstract(self.spec())
+
+    # ---------------- forward modes
+    def train_logits(self, params, batch, chunk: int = 1024):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.train_logits(params, cfg, batch["frames"],
+                                       batch["tokens"], chunk=chunk)
+        if cfg.modality == "image_patches":
+            logits, _ = lm.forward(params, cfg, mode="train",
+                                   tokens=batch["tokens"],
+                                   image_embeds=batch["image_embeds"],
+                                   chunk=chunk)
+            return logits[:, cfg.img_tokens:, :]
+        logits, _ = lm.forward(params, cfg, mode="train",
+                               tokens=batch["tokens"], chunk=chunk)
+        return logits
+
+    def prefill(self, params, batch, chunk: int = 1024, cache_len=None):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.prefill(params, cfg, batch["frames"],
+                                  batch["tokens"], chunk=chunk,
+                                  cache_len=cache_len)
+        if cfg.modality == "image_patches":
+            return lm.forward(params, cfg, mode="prefill",
+                              tokens=batch["tokens"],
+                              image_embeds=batch["image_embeds"],
+                              chunk=chunk, cache_len=cache_len)
+        return lm.forward(params, cfg, mode="prefill",
+                          tokens=batch["tokens"], chunk=chunk,
+                          cache_len=cache_len)
+
+    def decode(self, params, cache, tokens, cur_index):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.decode(params, cfg, cache, tokens, cur_index)
+        return lm.forward(params, cfg, mode="decode", tokens=tokens,
+                          cache=cache, cur_index=cur_index)
+
+    # ---------------- caches (decode state)
+    def _dec_params_cfg(self):
+        return self.cfg
+
+    def init_cache(self, batch: int, max_len: int, cross_len: int = 0,
+                   dtype=jnp.bfloat16):
+        return lm.init_cache(self.cfg, batch, max_len, dtype, cross_len)
+
+    def cache_abstract(self, batch: int, max_len: int, cross_len: int = 0,
+                       dtype=jnp.bfloat16):
+        return lm.cache_abstract(self.cfg, batch, max_len, dtype, cross_len)
+
+    def cache_axes(self, cross_len: int = 0):
+        return lm.cache_logical_axes(self.cfg, cross_len)
+
+
+def get_bundle(cfg: ModelConfig) -> Bundle:
+    return Bundle(cfg)

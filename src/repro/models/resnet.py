@@ -1,0 +1,86 @@
+"""Compact ResNet-50 (inference) — the paper's own evaluation model family.
+
+Used by the paper-faithful serving benchmarks (Fig 5/6: 15–3,600 ResNet50
+copies on one worker). Inference-mode batchnorm (folded scale/bias).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+STAGES = (3, 4, 6, 3)
+WIDTHS = (64, 128, 256, 512)
+
+
+def _conv_spec(cin, cout, k):
+    return ParamSpec((k, k, cin, cout), (None, None, None, None))
+
+
+def _bn_spec(c):
+    return {"scale": ParamSpec((c,), (None,), init="ones"),
+            "bias": ParamSpec((c,), (None,), init="zeros")}
+
+
+def _bottleneck_spec(cin, width, stride):
+    cout = width * 4
+    s = {
+        "conv1": _conv_spec(cin, width, 1), "bn1": _bn_spec(width),
+        "conv2": _conv_spec(width, width, 3), "bn2": _bn_spec(width),
+        "conv3": _conv_spec(width, cout, 1), "bn3": _bn_spec(cout),
+    }
+    if stride != 1 or cin != cout:
+        s["proj"] = _conv_spec(cin, cout, 1)
+        s["bn_proj"] = _bn_spec(cout)
+    return s
+
+
+def resnet50_spec(num_classes: int = 1000, scale: int = 1):
+    """scale>1 shrinks widths (for fast smoke/serving tests)."""
+    widths = tuple(max(8, w // scale) for w in WIDTHS)
+    spec = {"stem": _conv_spec(3, widths[0], 7), "bn_stem": _bn_spec(widths[0])}
+    cin = widths[0]
+    for si, (n, w) in enumerate(zip(STAGES, widths)):
+        blocks = []
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blocks.append(_bottleneck_spec(cin, w, stride))
+            cin = w * 4
+        spec[f"stage{si}"] = tuple(blocks)
+    spec["head"] = ParamSpec((cin, num_classes), (None, None))
+    return spec
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(p, x):
+    return x * p["scale"] + p["bias"]
+
+
+def _bottleneck(p, x, stride):
+    r = x
+    y = jax.nn.relu(_bn(p["bn1"], _conv(x, p["conv1"])))
+    y = jax.nn.relu(_bn(p["bn2"], _conv(y, p["conv2"], stride)))
+    y = _bn(p["bn3"], _conv(y, p["conv3"]))
+    if "proj" in p:
+        r = _bn(p["bn_proj"], _conv(x, p["proj"], stride))
+    return jax.nn.relu(y + r)
+
+
+def resnet50_forward(params, x):
+    """x (B, H, W, 3) -> logits (B, num_classes)."""
+    x = x.astype(params["stem"].dtype)
+    y = jax.nn.relu(_bn(params["bn_stem"], _conv(x, params["stem"], 2)))
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si in range(len(STAGES)):
+        for bi, bp in enumerate(params[f"stage{si}"]):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            y = _bottleneck(bp, y, stride)
+    y = y.mean(axis=(1, 2))
+    return y @ params["head"]

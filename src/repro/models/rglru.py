@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Linear recurrence h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t) with
+input-dependent gates. Train/prefill uses `lax.associative_scan` (the
+TPU-native parallel-scan formulation); decode is an O(1) state update.
+
+Simplification vs. the paper: the recurrence/input gates are per-channel
+(diagonal) rather than block-diagonal per head — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+from repro.models.ssm import causal_conv, conv_step
+
+
+def rglru_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.rglru.d_rnn or d
+    w = cfg.rglru.conv_width
+    return {
+        "w_x": ParamSpec((d, r), ("d_model", "d_rnn")),
+        "w_gate": ParamSpec((d, r), ("d_model", "d_rnn")),
+        "conv_k": ParamSpec((w, r), ("conv_w", "d_rnn")),
+        "conv_b": ParamSpec((r,), ("d_rnn",), init="zeros"),
+        "lam": ParamSpec((r,), ("d_rnn",), init="ones", dtype=jnp.float32),
+        "a_w": ParamSpec((r,), ("d_rnn",), init="ones", dtype=jnp.float32),
+        "a_b": ParamSpec((r,), ("d_rnn",), init="zeros", dtype=jnp.float32),
+        "i_w": ParamSpec((r,), ("d_rnn",), init="ones", dtype=jnp.float32),
+        "i_b": ParamSpec((r,), ("d_rnn",), init="zeros", dtype=jnp.float32),
+        "w_out": ParamSpec((r, d), ("d_rnn", "d_model")),
+    }
+
+
+def _gates(p, cfg: ModelConfig, xb32):
+    r_gate = jax.nn.sigmoid(xb32 * p["a_w"] + p["a_b"])
+    i_gate = jax.nn.sigmoid(xb32 * p["i_w"] + p["i_b"])
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["lam"]) * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i_gate * xb32)
+    return a, b
+
+
+def rglru_full(p, cfg: ModelConfig, x):
+    """x (B,L,d) -> (y, state)."""
+    w = cfg.rglru.conv_width
+    xb = jnp.einsum("bld,dr->blr", x, p["w_x"])
+    conv_state = xb[:, -(w - 1):]
+    xb = causal_conv(xb, p["conv_k"]) + p["conv_b"]
+    xb = constrain(xb, "batch", "seq", "d_rnn")
+    xb32 = xb.astype(jnp.float32)
+    a, b = _gates(p, cfg, xb32)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = constrain(h, "batch", "seq", "d_rnn")
+    gate = jax.nn.gelu(
+        jnp.einsum("bld,dr->blr", x, p["w_gate"]).astype(jnp.float32),
+        approximate=True)
+    y = jnp.einsum("blr,rd->bld", (h * gate).astype(x.dtype), p["w_out"])
+    state = {"h": h[:, -1], "conv": conv_state}
+    return constrain(y, "batch", "seq", "d_model"), state
+
+
+def rglru_decode(p, cfg: ModelConfig, x, state):
+    """One token. x (B,1,d)."""
+    xb = jnp.einsum("bld,dr->blr", x, p["w_x"])
+    xb, conv_state = conv_step(xb, state["conv"], p["conv_k"])
+    xb = xb + p["conv_b"]
+    xb32 = xb[:, 0].astype(jnp.float32)
+    a, b = _gates(p, cfg, xb32)
+    h = a * state["h"] + b
+    h = constrain(h, "batch", "d_rnn")
+    gate = jax.nn.gelu(
+        jnp.einsum("bld,dr->blr", x, p["w_gate"]).astype(jnp.float32),
+        approximate=True)[:, 0]
+    y = jnp.einsum("br,rd->bd", (h * gate).astype(x.dtype), p["w_out"])
+    return constrain(y[:, None], "batch", "seq", "d_model"), \
+        {"h": h, "conv": conv_state}
+
+
+def rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    r = cfg.rglru.d_rnn or cfg.d_model
+    w = cfg.rglru.conv_width
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, w - 1, r), dtype)}
+
+
+def rglru_state_axes():
+    return {"h": ("batch", "d_rnn"), "conv": ("batch", "conv_w", "d_rnn")}

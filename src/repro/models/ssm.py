@@ -1,0 +1,213 @@
+"""Mamba2 (state-space duality) mixer block.
+
+Implements the chunked SSD algorithm: intra-chunk attention-like einsums +
+inter-chunk state passing via a short scan. Decode is an O(1) state update —
+the property that makes SSMs the most Clockwork-friendly family (DECODE
+latency independent of context length; see DESIGN.md §4).
+
+The pure-jnp path here is also the oracle for the Pallas `ssd_scan` kernel
+(`repro.kernels.ref` re-exports `ssd_reference`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+def mamba_spec(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    h = (d * s.expand) // s.head_dim        # number of SSD heads
+    p, n, w = s.head_dim, s.d_state, s.conv_width
+    return {
+        "w_x": ParamSpec((d, h, p), ("d_model", "ssm_heads", "ssm_hd")),
+        "w_z": ParamSpec((d, h, p), ("d_model", "ssm_heads", "ssm_hd")),
+        "w_b": ParamSpec((d, n), ("d_model", "ssm_state")),
+        "w_c": ParamSpec((d, n), ("d_model", "ssm_state")),
+        "w_dt": ParamSpec((d, h), ("d_model", "ssm_heads")),
+        "b_dt": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "a_log": ParamSpec((h,), ("ssm_heads",), init="ones",
+                           dtype=jnp.float32),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), init="ones",
+                            dtype=jnp.float32),
+        "conv_x": ParamSpec((w, h, p), ("conv_w", "ssm_heads", "ssm_hd")),
+        "conv_b": ParamSpec((w, n), ("conv_w", "ssm_state")),
+        "conv_c": ParamSpec((w, n), ("conv_w", "ssm_state")),
+        "norm": ParamSpec((h, p), ("ssm_heads", "ssm_hd"), init="zeros",
+                          dtype=jnp.float32),
+        "w_out": ParamSpec((h, p, d), ("ssm_heads", "ssm_hd", "d_model")),
+    }
+
+
+def ssm_heads(cfg: ModelConfig) -> int:
+    return (cfg.d_model * cfg.ssm.expand) // cfg.ssm.head_dim
+
+
+def causal_conv(x, kern):
+    """Depthwise causal conv along axis 1. x (B,L,*C); kern (w,*C)."""
+    w = kern.shape[0]
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (w - 1, 0)
+    xp = jnp.pad(x, pad)
+    L = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(w):
+        y = y + kern[i].astype(jnp.float32) * xp[:, i:i + L].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def conv_step(x_new, state, kern):
+    """One-token conv. x_new (B,1,*C); state (B,w-1,*C)."""
+    full = jnp.concatenate([state, x_new], axis=1)
+    w = kern.shape[0]
+    y = sum(kern[i].astype(jnp.float32) * full[:, i].astype(jnp.float32)
+            for i in range(w))
+    return y[:, None].astype(x_new.dtype), full[:, 1:]
+
+
+def ssd_reference(x, dt, a, b, c, *, chunk: int, initial_state=None):
+    """Chunked SSD. x (Bt,L,H,P); dt (Bt,L,H) f32; a (H,) f32 (negative);
+    b, c (Bt,L,N). Returns (y (Bt,L,H,P), state (Bt,H,P,N) f32)."""
+    Bt, L, H, Pd = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, L)
+    L0 = L
+    if L % Q:        # pad tail: dt=0 => decay 1, zero input; state unaffected
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        L += pad
+    nc = L // Q
+
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    dA = dt * a                                      # (Bt,L,H) log-decay
+    dA_c = dA.reshape(Bt, nc, Q, H)
+    cum = jnp.cumsum(dA_c, axis=2)                   # (Bt,nc,Q,H)
+    x_c = xdt.reshape(Bt, nc, Q, H, Pd)
+    b_c = b.reshape(Bt, nc, Q, N)
+    c_c = c.reshape(Bt, nc, Q, N)
+
+    # intra-chunk
+    scores = jnp.einsum("bcqn,bckn->bcqk", c_c, b_c).astype(jnp.float32)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (Bt,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    w_full = scores[..., None] * lmat                # (Bt,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp",
+                         w_full.astype(x.dtype), x_c)
+
+    # chunk summary states
+    to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (Bt,nc,Q,H)
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                         to_end, b_c.astype(jnp.float32),
+                         x_c.astype(jnp.float32))    # (Bt,nc,H,P,N)
+
+    # inter-chunk state recurrence
+    t_total = jnp.exp(cum[:, :, -1, :])              # (Bt,nc,H)
+    s0 = (jnp.zeros((Bt, H, Pd, N), jnp.float32)
+          if initial_state is None else initial_state)
+
+    def body(s_in, xs):
+        t_c, s_c = xs
+        s_out = s_in * t_c[:, :, None, None] + s_c
+        return s_out, s_in
+
+    s_last, s_ins = jax.lax.scan(
+        body, s0, (t_total.swapaxes(0, 1), s_chunk.swapaxes(0, 1)))
+    s_ins = s_ins.swapaxes(0, 1)                     # (Bt,nc,H,P,N) incoming
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         c_c.astype(jnp.float32), jnp.exp(cum), s_ins)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bt, L, H, Pd)
+    return y[:, :L0].astype(x.dtype), s_last
+
+
+def _branches(p, cfg: ModelConfig, x):
+    """Project input to SSD operands (pre-conv)."""
+    xh = jnp.einsum("bld,dhp->blhp", x, p["w_x"])
+    z = jnp.einsum("bld,dhp->blhp", x, p["w_z"])
+    b = jnp.einsum("bld,dn->bln", x, p["w_b"])
+    c = jnp.einsum("bld,dn->bln", x, p["w_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x.astype(jnp.float32),
+                   p["w_dt"].astype(jnp.float32)) + p["b_dt"].astype(jnp.float32))
+    return xh, z, b, c, dt
+
+
+def _finish(p, cfg: ModelConfig, y, z, xh):
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=(-2, -1), keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["norm"])
+    g = constrain(g.astype(xh.dtype), "batch", "seq", "ssm_heads", "ssm_hd")
+    return jnp.einsum("blhp,hpd->bld", g, p["w_out"])
+
+
+def mamba_full(p, cfg: ModelConfig, x):
+    """Train/prefill. x (B,L,d) -> (y, state-dict)."""
+    s = cfg.ssm
+    xh, z, b, c, dt = _branches(p, cfg, x)
+    conv_x_state = xh[:, -(s.conv_width - 1):]       # pre-activation tails
+    conv_b_state = b[:, -(s.conv_width - 1):]
+    conv_c_state = c[:, -(s.conv_width - 1):]
+    xh = jax.nn.silu(causal_conv(xh, p["conv_x"]).astype(jnp.float32)
+                     ).astype(x.dtype)
+    b = jax.nn.silu(causal_conv(b, p["conv_b"]).astype(jnp.float32)
+                    ).astype(x.dtype)
+    c = jax.nn.silu(causal_conv(c, p["conv_c"]).astype(jnp.float32)
+                    ).astype(x.dtype)
+    xh = constrain(xh, "batch", "seq", "ssm_heads", "ssm_hd")
+    a = -jnp.exp(p["a_log"])
+    y, s_last = ssd_reference(xh, dt, a, b, c, chunk=s.chunk)
+    out = _finish(p, cfg, y.astype(jnp.float32), z, xh)
+    state = {"ssm": s_last, "conv_x": conv_x_state,
+             "conv_b": conv_b_state, "conv_c": conv_c_state}
+    return constrain(out, "batch", "seq", "d_model"), state
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state):
+    """One token. x (B,1,d). state from make_state/mamba_full."""
+    xh, z, b, c, dt = _branches(p, cfg, x)
+    xh, cx = conv_step(xh, state["conv_x"], p["conv_x"])
+    b, cb = conv_step(b, state["conv_b"], p["conv_b"])
+    c, cc = conv_step(c, state["conv_c"], p["conv_c"])
+    xh = jax.nn.silu(xh.astype(jnp.float32)).astype(x.dtype)
+    b = jax.nn.silu(b.astype(jnp.float32)).astype(x.dtype)
+    c = jax.nn.silu(c.astype(jnp.float32)).astype(x.dtype)
+    a = -jnp.exp(p["a_log"])                          # (H,)
+    dA = jnp.exp(dt[:, 0] * a)                        # (B,H)
+    xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]
+    s_new = (state["ssm"] * dA[:, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xdt, b[:, 0].astype(jnp.float32)))
+    s_new = constrain(s_new, "batch", "ssm_heads", "ssm_hd", "ssm_state")
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c[:, 0].astype(jnp.float32))
+    out = _finish(p, cfg, y[:, None], z, xh)
+    state = {"ssm": s_new, "conv_x": cx, "conv_b": cb, "conv_c": cc}
+    return constrain(out, "batch", "seq", "d_model"), state
+
+
+def mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    h = ssm_heads(cfg)
+    w = s.conv_width - 1
+    return {
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, w, h, s.head_dim), dtype),
+        "conv_b": jnp.zeros((batch, w, s.d_state), dtype),
+        "conv_c": jnp.zeros((batch, w, s.d_state), dtype),
+    }
+
+
+def mamba_state_axes():
+    return {
+        "ssm": ("batch", "ssm_heads", "ssm_hd", "ssm_state"),
+        "conv_x": ("batch", "conv_w", "ssm_heads", "ssm_hd"),
+        "conv_b": ("batch", "conv_w", "ssm_state"),
+        "conv_c": ("batch", "conv_w", "ssm_state"),
+    }

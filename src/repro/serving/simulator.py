@@ -1,0 +1,160 @@
+"""Cluster simulation harness: builds controller + workers + clients on a
+virtual clock and replays paper-scale experiments in seconds.
+
+Model profiles come from two sources:
+  * the paper's own Table 1 (v100 measurements) for the faithful
+    ResNet-family reproduction, and
+  * roofline-derived TPU v5e profiles for the assigned LM architectures
+    (benchmarks/roofline.py writes them from dry-run artifacts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+from repro.core.actions import ActionType, Request
+from repro.core.clock import EventLoop, VirtualClock
+from repro.core.controller import Controller
+from repro.core.scheduler import ClockworkScheduler
+from repro.core.worker import ModelDef, SimBackend, Worker
+
+# --- paper Table 1 (v100, TVM 0.7): model -> (weights MB, B1,B2,B4,B8,B16 ms)
+PAPER_TABLE1 = {
+    "resnet50_v2": (102.2, 2.73, 4.05, 5.87, 9.93, 17.3),
+    "resnet18_v2": (46.7, 1.32, 1.81, 2.48, 4.42, 7.12),
+    "resnet101_v2": (178.1, 5.51, 8.05, 11.83, 18.14, 33.57),
+    "densenet121": (31.8, 3.80, 4.52, 6.55, 10.22, 17.91),
+    "googlenet": (26.5, 1.54, 1.94, 2.69, 4.19, 7.11),
+    "inceptionv3": (95.3, 4.46, 6.85, 10.99, 16.45, 26.17),
+    "mobile_pose_mobilenet1.0": (20.0, 0.99, 1.72, 2.99, 5.67, 10.78),
+    "resnest50": (109.8, 6.96, 9.47, 14.27, 29.94, 56.02),
+    "resnext50_32x4d": (100.0, 2.18, 3.23, 5.35, 9.21, 17.42),
+    "winograd_resnet18_v2": (77.4, 0.95, 1.17, 1.71, 2.81, 5.09),
+}
+PAPER_PCIE_BW = 12.3e9   # ~102.2MB / 8.32ms, v100 PCIe3 measured in Table 1
+
+
+def table1_modeldef(model_id: str, family: str = "resnet50_v2") -> ModelDef:
+    mb, b1, b2, b4, b8, b16 = PAPER_TABLE1[family]
+    lat = {("INFER", b): ms / 1e3
+           for b, ms in zip((1, 2, 4, 8, 16), (b1, b2, b4, b8, b16))}
+    return ModelDef(model_id=model_id, weights_bytes=int(mb * 1e6),
+                    exec_latency=lat)
+
+
+def seed_profiles(models: Dict[str, ModelDef],
+                  host_to_dev_bw: float) -> dict:
+    out = {}
+    for mid, md in models.items():
+        for (t, b), d in md.exec_latency.items():
+            out[(t, mid, b)] = d
+        out[("LOAD", mid, 1)] = 1e-3 + md.weights_bytes / host_to_dev_bw
+    return out
+
+
+@dataclasses.dataclass
+class Cluster:
+    loop: EventLoop
+    controller: Controller
+    workers: List[Worker]
+    models: Dict[str, ModelDef]
+    clients: list = dataclasses.field(default_factory=list)
+
+    def submit(self, req: Request):
+        self.controller.on_request(req)
+
+    def attach_clients(self, clients):
+        self.clients.extend(clients)
+        existing = self.controller.on_response
+
+        def fan(req):
+            if existing:
+                existing(req)
+            for c in self.clients:
+                if hasattr(c, "on_response"):
+                    c.on_response(req)
+
+        self.controller.on_response = fan
+
+    def run(self, t_end: float):
+        self.loop.run_until(t_end)
+        return self.controller.summary()
+
+
+def build_cluster(models: Dict[str, ModelDef], *, n_workers: int = 1,
+                  gpus_per_worker: int = 1, scheduler=None,
+                  device_memory: float = 32e9, host_to_dev_bw: float = 12.3e9,
+                  noise: float = 0.0003, spike_prob: float = 0.0,
+                  spike_scale: float = 5.0,
+                  action_delay: float = 0.0005, seed: int = 0,
+                  preload: Optional[List[str]] = None) -> Cluster:
+    loop = EventLoop(VirtualClock())
+    sched = scheduler if scheduler is not None else ClockworkScheduler()
+    workers = []
+    controller = Controller(loop, models, sched, action_delay=action_delay)
+    profiles = seed_profiles(models, host_to_dev_bw)
+    for i in range(n_workers):
+        backend = SimBackend(host_to_dev_bw=host_to_dev_bw, noise=noise,
+                             spike_prob=spike_prob, spike_scale=spike_scale,
+                             seed=seed + i)
+        w = Worker(f"w{i}", loop, backend, models, n_gpus=gpus_per_worker,
+                   device_memory_bytes=device_memory)
+        workers.append(w)
+        controller.add_worker(w, profiles if i == 0 else None)
+    if preload:
+        # place models round-robin before time starts (warm start)
+        gpu_list = [(w, g) for w in workers for g in range(w.n_gpus)]
+        for j, mid in enumerate(preload):
+            w, g = gpu_list[j % len(gpu_list)]
+            md = models[mid]
+            pages = md.pages(w.pagecaches[g].page_bytes)
+            if w.pagecaches[g].alloc(mid, pages):
+                mirr = controller.workers[w.worker_id].gpus[g]
+                mirr.pagecache.alloc(mid, pages)
+    return Cluster(loop=loop, controller=controller, workers=workers,
+                   models=models)
+
+
+class TimeSeries:
+    """Windowed goodput/latency sampler for figure benchmarks."""
+
+    def __init__(self, cluster: Cluster, dt: float = 1.0):
+        self.cluster = cluster
+        self.dt = dt
+        self.samples = []
+        self._last_counts = dict(cluster.controller.stats)
+        self._window_lat: List[float] = []
+        base = cluster.controller.on_response
+
+        def hook(req):
+            if base:
+                base(req)
+            if req.status == "ok":
+                self._window_lat.append(req.completion - req.arrival)
+
+        cluster.controller.on_response = hook
+        cluster.loop.schedule(dt, self._sample)
+
+    def _sample(self):
+        c = self.cluster.controller
+        now = self.cluster.loop.now()
+        cur = dict(c.stats)
+        lat = sorted(self._window_lat)
+
+        def pct(q):
+            return lat[min(len(lat) - 1, int(q * len(lat)))] if lat else None
+
+        self.samples.append({
+            "t": now,
+            "goodput_rs": (cur["goodput"]
+                           - self._last_counts["goodput"]) / self.dt,
+            "timeout_rs": (cur["timeout"]
+                           - self._last_counts["timeout"]) / self.dt,
+            "rejected_rs": (cur["rejected"]
+                            - self._last_counts["rejected"]) / self.dt,
+            "p50": pct(0.50), "p99": pct(0.99), "max": pct(1.0),
+        })
+        self._last_counts = cur
+        self._window_lat = []
+        self.cluster.loop.schedule(now + self.dt, self._sample)

@@ -1,0 +1,153 @@
+"""Pure-JAX optimizers: AdamW (small models) and Adafactor (large models —
+factored second moments keep optimizer HBM negligible, which is what lets the
+235B/400B MoE cells fit a 256-chip v5e pod; see DESIGN.md §5).
+
+Optimizer state is spec-first like parameters: ``opt_spec`` mirrors a
+ParamSpec tree so the dry-run lowers the exact state the runnable code uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, is_spec, tree_map_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    spec: Callable          # param_spec_tree -> opt_state_spec_tree
+    init: Callable          # params -> opt_state
+    update: Callable        # (grads, opt_state, params, step) -> (params, opt_state)
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------------ AdamW
+
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def spec(pspec_tree):
+        def one(s: ParamSpec):
+            f32 = ParamSpec(s.shape, s.axes, jnp.float32, init="zeros")
+            return {"m": f32, "v": f32}
+        return tree_map_specs(one, pspec_tree)
+
+    def init(params):
+        return jax.tree.map(
+            lambda p: {"m": jnp.zeros(p.shape, jnp.float32),
+                       "v": jnp.zeros(p.shape, jnp.float32)}, params)
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def one(g, s, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * g32
+            v = b2 * s["v"] + (1 - b2) * jnp.square(g32)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, {"m": m, "v": v}
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, new_s
+
+    return Optimizer("adamw", spec, init, update)
+
+
+# ---------------------------------------------------------------- Adafactor
+
+def adafactor(lr: float = 1e-2, decay_pow: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    def _factored(shape):
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def spec(pspec_tree):
+        def one(s: ParamSpec):
+            if _factored(s.shape):
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.axes[:-1], jnp.float32,
+                                    init="zeros"),
+                    "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                    s.axes[:-2] + s.axes[-1:], jnp.float32,
+                                    init="zeros"),
+                }
+            return {"v": ParamSpec(s.shape, s.axes, jnp.float32,
+                                   init="zeros")}
+        return tree_map_specs(one, pspec_tree)
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay_pow)
+
+        def one(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                    + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g32 * rfac[..., None] * cfac[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    return Optimizer("adafactor", spec, init, update)
+
+
+def get_optimizer(name: str, lr: float = 1e-3) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise ValueError(name)

@@ -1,0 +1,81 @@
+"""Small shared helpers."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of a pytree of arrays or ShapeDtypeStructs."""
+    leaves = jax.tree.leaves(tree)
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves)
+
+
+def tree_params(tree: Any) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}EB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ("F", "KF", "MF", "GF", "TF", "PF"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}EF"
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the target chip (TPU v5e, per system spec)."""
+
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12   # FLOP/s per chip
+    hbm_bandwidth: float = 819e9      # bytes/s per chip
+    ici_link_bandwidth: float = 50e9  # bytes/s per link
+    hbm_capacity: float = 16e9        # bytes per chip
+    host_to_hbm_bandwidth: float = 25e9  # bytes/s (PCIe-class DMA, LOAD path)
+
+
+V5E = HardwareSpec()
+
+
+def percentile(xs, q: float) -> float:
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def welford_summary(xs) -> dict:
+    a = np.asarray(xs, dtype=np.float64)
+    if a.size == 0:
+        return {"n": 0}
+    return {
+        "n": int(a.size),
+        "mean": float(a.mean()),
+        "p50": float(np.percentile(a, 50)),
+        "p99": float(np.percentile(a, 99)),
+        "p99.9": float(np.percentile(a, 99.9)),
+        "max": float(a.max()),
+        "min": float(a.min()),
+    }

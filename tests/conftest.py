@@ -1,0 +1,6 @@
+# NOTE: no XLA_FLAGS here on purpose — tests run on the real single CPU
+# device; only launch/dryrun.py forces 512 host devices (in its own process).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

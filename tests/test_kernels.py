@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles
+(deliverable (c))."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.ssm import ssd_reference
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+ATTN_CASES = [
+    # B, Sq, Skv, H, K, D, causal, window, cap
+    (2, 64, 64, 4, 2, 32, True, 0, 0.0),
+    (1, 100, 100, 2, 2, 16, True, 24, 50.0),
+    (2, 48, 48, 4, 1, 64, False, 0, 0.0),
+    (1, 96, 96, 8, 8, 128, True, 0, 30.0),
+    (1, 33, 33, 2, 1, 16, True, 7, 0.0),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_matches_oracle(case, dtype):
+    B, Sq, Skv, H, K, D, causal, window, cap = case
+    q, k, v = (_rand((B, Sq, H, D), dtype), _rand((B, Skv, K, D), dtype),
+               _rand((B, Skv, K, D), dtype))
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              cap=cap, block_q=32, block_k=32)
+    ke, ve = jnp.repeat(k, H // K, 2), jnp.repeat(v, H // K, 2)
+    r = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D),
+        ke.transpose(0, 2, 1, 3).reshape(B * H, Skv, D),
+        ve.transpose(0, 2, 1, 3).reshape(B * H, Skv, D),
+        causal=causal, window=window, cap=cap)
+    r = r.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+DECODE_CASES = [
+    # B, S, H, K, D, window, ring
+    (2, 40, 4, 2, 32, 0, False),
+    (1, 32, 2, 1, 16, 8, True),
+    (2, 64, 8, 2, 64, 0, False),
+    (1, 48, 4, 4, 128, 16, True),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_flash_decode_matches_oracle(case, dtype):
+    B, S, H, K, D, window, ring = case
+    q = _rand((B, 1, H, D), dtype)
+    k, v = _rand((B, S, K, D), dtype), _rand((B, S, K, D), dtype)
+    cur = 25
+    if ring:
+        j = jnp.arange(S)
+        kpos = cur - jnp.mod(cur - j, S)
+    else:
+        kpos = jnp.arange(S)
+    got = ops.flash_decode(q, k, v, kpos, cur, window=window, block_s=16)
+    G = H // K
+    qf = q.reshape(B, K, G, D).reshape(B * K, G, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    r = ref.flash_decode_ref(qf, kf, vf, kpos, cur, window=window
+                             ).reshape(B, K * G, D)[:, None]
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+SSD_CASES = [
+    (2, 64, 3, 16, 8, 16),
+    (1, 50, 2, 8, 16, 16),   # ragged length -> padding path
+    (1, 128, 4, 32, 16, 32),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_matches_oracle(case, dtype):
+    B, L, H, P, N, chunk = case
+    x = _rand((B, L, H, P), dtype) * 0.5
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, L, H)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    bm = _rand((B, L, N), dtype) * 0.5
+    cm = _rand((B, L, N), dtype) * 0.5
+    y_ref, s_ref = ssd_reference(x, dt, a, bm, cm, chunk=chunk)
+    y, s = ops.ssd(x, dt, a, bm, cm, chunk=chunk)
+    tol = 3e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_xla_custom_vjp_grads():
+    """The XLA flash path (dry-run fallback) has exact custom gradients."""
+    import jax
+    from repro.models.attention import chunked_attention, naive_attention
+    q = _rand((2, 33, 2, 3, 16), jnp.float32)
+    k = _rand((2, 33, 2, 16), jnp.float32)
+    v = _rand((2, 33, 2, 16), jnp.float32)
+    for causal, window, cap in [(True, 0, 0.0), (True, 7, 20.0),
+                                (False, 0, 0.0)]:
+        f_ref = lambda *a: (naive_attention(
+            *a, causal=causal, window=window, cap=cap) ** 2).sum()
+        f_got = lambda *a: (chunked_attention(
+            *a, causal=causal, window=window, cap=cap, chunk=8) ** 2).sum()
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        gg = jax.grad(f_got, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gr, gg):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=3e-4, atol=3e-4)
