@@ -25,7 +25,5 @@ def report_line(name: str, us_per_call: float, derived: str):
 
 
 def pctile(xs, q):
-    xs = sorted(xs)
-    if not xs:
-        return float("nan")
-    return xs[min(len(xs) - 1, int(q * (len(xs) - 1)))]
+    from repro.telemetry.reports import quantile
+    return quantile(xs, q)

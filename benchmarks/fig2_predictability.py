@@ -8,12 +8,11 @@ the distribution is still orders tighter than the concurrent-execution tail
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import pctile, report_line, write_csv
+from benchmarks.common import report_line, write_csv
 from repro.serving.engine import make_resnet_model
+from repro.telemetry.reports import latency_quantiles, latency_summary
 
 
 def run(n: int = 300, quick: bool = False):
@@ -21,13 +20,11 @@ def run(n: int = 300, quick: bool = False):
     jm = make_resnet_model("fig2", scale=16, img=64, batches=(1,))
     jm.warmup(reps=2)
     lats = [jm.run(1) for _ in range(n)]
-    med = float(np.median(lats))
-    rows = [(q, pctile(lats, q) * 1e3) for q in
-            (0.5, 0.9, 0.99, 0.999, 1.0)]
+    s = latency_summary(lats)
+    rows = [(q, v * 1e3) for q, v in latency_quantiles(lats)]
     write_csv("fig2_predictability", rows, ["quantile", "latency_ms"])
-    spread = (pctile(lats, 0.99) - med) / med
-    report_line("fig2_inference_latency", med * 1e6,
-                f"p99_over_median={1 + spread:.4f}")
+    report_line("fig2_inference_latency", s["median"] * 1e6,
+                f"p99_over_median={s['p99_over_median']:.4f}")
 
     # Fig 2b analogue: one-at-a-time (consolidated) vs concurrent execution
     # tail, via the calibrated noise models used across the simulations
@@ -42,4 +39,5 @@ def run(n: int = 300, quick: bool = False):
         np.percentile(serial, 99.9) - 1.0, 1e-9)
     report_line("fig2b_tail_ratio_concurrent_vs_serial", 0.0,
                 f"tail_ratio={tail_ratio:.0f}x")
-    return {"median_ms": med * 1e3, "p99_over_median": 1 + spread}
+    return {"median_ms": s["median"] * 1e3,
+            "p99_over_median": s["p99_over_median"]}

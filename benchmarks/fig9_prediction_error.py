@@ -1,41 +1,35 @@
 """Fig 9: action-latency prediction error (over- vs under-prediction CDFs)
-and completion-time error, from a sustained mixed run."""
+from a sustained mixed run — computed end-to-end from the telemetry
+Recorder's ActionRecords (predicted vs actual per action), not from the
+profiler's internal error lists."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import report_line, write_csv
-from repro.core.actions import ActionType
 from repro.core.scheduler import ClockworkScheduler
 from repro.serving.simulator import build_cluster, table1_modeldef
 from repro.serving.workload import ClosedLoopClient
+from repro.telemetry.reports import prediction_error_report
 
 
 def run(quick: bool = False):
     dur = 8.0 if quick else 25.0
     models = {f"m{i}": table1_modeldef(f"m{i}") for i in range(6)}
     cl = build_cluster(models, n_workers=2, device_memory=1.5e9,  # churn
-                       scheduler=ClockworkScheduler(), noise=0.0005,
-                       spike_prob=0.0005, spike_scale=5.0)
+                      scheduler=ClockworkScheduler(), noise=0.0005,
+                      spike_prob=0.0005, spike_scale=5.0)
     clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.100,
                                 concurrency=8) for mid in models]
     cl.attach_clients(clients)
     cl.run(dur)
-    prof = cl.controller.profiler
 
-    def stats(xs):
-        if not xs:
-            return (0, 0.0, 0.0)
-        a = np.asarray(xs)
-        return (len(a), float(np.percentile(a, 99) * 1e6),
-                float(a.max() * 1e6))
-
-    n_o, p99_o, max_o = stats(prof.over_errors)
-    n_u, p99_u, max_u = stats(prof.under_errors)
+    rep = prediction_error_report(cl.recorder.iter_actions())
+    over, under = rep["over"], rep["under"]
     write_csv("fig9_prediction_error",
-              [("over", n_o, p99_o, max_o), ("under", n_u, p99_u, max_u)],
+              [("over", over["n"], over["p99_us"], over["max_us"]),
+               ("under", under["n"], under["p99_us"], under["max_us"])],
               ["kind", "n", "p99_us", "max_us"])
     report_line("fig9_prediction_error", 0.0,
-                f"over_p99_us={p99_o:.0f};under_p99_us={p99_u:.0f};"
-                f"n={n_o + n_u}")
-    return {"over_p99_us": p99_o, "under_p99_us": p99_u}
+                f"over_p99_us={over['p99_us']:.0f};"
+                f"under_p99_us={under['p99_us']:.0f};"
+                f"n={over['n'] + under['n']}")
+    return {"over_p99_us": over["p99_us"], "under_p99_us": under["p99_us"]}

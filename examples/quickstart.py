@@ -4,6 +4,10 @@ Starts an in-process cluster (controller + one worker with a JAX backend),
 registers two models (a reduced ResNet-50 — the paper's eval model — and an
 LM decode engine), submits batched requests, and prints latency/goodput.
 
+Profiles persist across runs: the first run measures (or you pre-measure
+with `python -m repro.telemetry.profiler`) and writes
+experiments/profiles.json; repeat runs seed from it and skip warmup.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -16,8 +20,12 @@ from repro.core.controller import Controller
 from repro.core.scheduler import ClockworkScheduler
 from repro.core.worker import Worker
 from repro.serving.engine import (JaxBackend, make_lm_decode_model,
-                                  make_resnet_model)
+                                  make_resnet_model, seed_engines,
+                                  update_store)
+from repro.telemetry import ProfileStore
 from repro.utils import welford_summary
+
+STORE_PATH = "experiments/profiles.json"
 
 
 def main():
@@ -30,14 +38,19 @@ def main():
         "qwen2_decode": make_lm_decode_model("qwen2_decode", "qwen2-0.5b",
                                              batches=(1, 2, 4), ctx=128),
     }
+    store = ProfileStore.load_if_exists(STORE_PATH)
+    if store is not None:
+        print(f"[quickstart] seeding profiles from {STORE_PATH} "
+              "(skipping warmup re-measurement)")
+    profiles = seed_engines(engines, store)
+    for e in engines.values():
+        if e.warmup_count == 0:   # store-seeded: warmup didn't compile it
+            e.compile()   # AOT, untimed — keeps compiles off the hot path
     models = {k: v.modeldef() for k, v in engines.items()}
     backend = JaxBackend(engines)
     worker = Worker("w0", loop, backend, models, n_gpus=1)
     controller = Controller(loop, models, ClockworkScheduler(),
                             action_delay=1e-4)
-    profiles = {}
-    for e in engines.values():
-        profiles.update(e.seed_profiles())
     controller.add_worker(worker, profiles)
 
     done = []
@@ -59,6 +72,17 @@ def main():
         est = controller.profiler.estimate("INFER", mid, 1)
         print(f"[quickstart] learned INFER profile {mid} b1: "
               f"{est * 1e3:.2f} ms")
+
+    rep = controller.telemetry_report()
+    bd = rep["breakdown"]
+    print(f"[quickstart] latency breakdown (median s): "
+          f"queue={bd['queue']['median']:.4f} "
+          f"exec={bd['exec']['median']:.4f} "
+          f"total={bd['total']['median']:.4f}; "
+          f"cold_starts={bd['cold_starts']}")
+    update_store(engines, store or ProfileStore(), controller) \
+        .save(STORE_PATH)
+    print(f"[quickstart] profiles persisted -> {STORE_PATH}")
 
 
 if __name__ == "__main__":

@@ -64,6 +64,7 @@ class Action:
     id: int = dataclasses.field(default_factory=lambda: next(_action_ids))
     issued_at: float = 0.0
     expected_completion: float = 0.0
+    received_at: float = 0.0         # stamped by the worker on receipt
 
 
 @dataclasses.dataclass
@@ -79,3 +80,4 @@ class Result:
     duration: float                  # on-device execution time
     batch_size: int = 1
     request_ids: Tuple[int, ...] = ()
+    t_received: float = 0.0          # worker-side receipt stamp (telemetry)

@@ -27,6 +27,8 @@ from repro.core.clock import EventLoop
 from repro.core.pagecache import PageCache
 from repro.core.predictor import ActionProfiler
 from repro.core.worker import ModelDef, Worker
+from repro.telemetry.recorder import Recorder
+from repro.telemetry.reports import summarize_run
 
 
 @dataclasses.dataclass
@@ -60,7 +62,9 @@ class Controller:
                  heartbeat_interval: float = 1.0,
                  heartbeat_timeout: float = 0.5,
                  result_grace: float = 0.050,
-                 default_slo: float = 0.100):
+                 default_slo: float = 0.100,
+                 missed_result_threshold: int = 2,
+                 recorder: Optional[Recorder] = None):
         self.loop = loop
         self.models = models
         self.scheduler = scheduler
@@ -69,6 +73,7 @@ class Controller:
         self.heartbeat_timeout = heartbeat_timeout
         self.result_grace = result_grace
         self.default_slo = default_slo
+        self.missed_result_threshold = missed_result_threshold
 
         self.workers: Dict[str, WorkerMirror] = {}
         self.profiler = ActionProfiler()
@@ -78,6 +83,7 @@ class Controller:
         self._ticker_on = False
 
         # telemetry
+        self.recorder = recorder if recorder is not None else Recorder()
         self.completed: List[Request] = []
         self.results_log: List[Result] = []
         self.stats = {"goodput": 0, "timeout": 0, "rejected": 0,
@@ -96,6 +102,11 @@ class Controller:
                 self.profiler.seed(t, mid, b, d)
         self.scheduler.on_topology_change()
         return m
+
+    def seed_from_store(self, store):
+        """Seed action profiles from a persistent ProfileStore — the
+        startup path that replaces per-process warmup re-measurement."""
+        store.seed_profiler(self.profiler)
 
     def remove_worker(self, worker_id: str):
         """Graceful removal (elastic scale-down)."""
@@ -159,6 +170,7 @@ class Controller:
 
     def on_request(self, req: Request):
         self.requests[req.id] = req
+        self.recorder.span_open(req, queued=self.loop.now())
         self.scheduler.on_request(req)
         self.scheduler.tick()
         self._ensure_ticker()
@@ -170,6 +182,7 @@ class Controller:
         req.completion = when if when is not None else self.loop.now()
         self.stats["rejected"] += 1
         self.completed.append(req)
+        self.recorder.span_close(req, req.completion)
         if self.on_response:
             self.on_response(req)
 
@@ -184,6 +197,7 @@ class Controller:
             req.status = "timeout"
             self.stats["timeout"] += 1
         self.completed.append(req)
+        self.recorder.span_close(req, when)
         if self.on_response:
             self.on_response(req)
 
@@ -216,6 +230,9 @@ class Controller:
         elif action.type in EXEC_TYPES:
             g.pagecache.touch(action.model_id)
             g.exec_free_at = action.expected_completion
+            self.recorder.span_dispatch(action.request_ids, now,
+                                        action.worker_id, action.gpu_id,
+                                        action.batch_size)
         m.outstanding[action.id] = action
         self.stats["actions"] += 1
         self.loop.schedule_in(self.action_delay,
@@ -229,7 +246,7 @@ class Controller:
                 mm = self.workers.get(wid)
                 if mm is not None and aid in mm.outstanding:
                     mm.missed_results += 1
-                    if mm.missed_results >= 1:
+                    if mm.missed_results >= self.missed_result_threshold:
                         self.worker_failed(wid)
 
             self.loop.schedule(max(deadline, action.latest
@@ -239,8 +256,10 @@ class Controller:
     def on_result(self, result: Result):
         self.results_log.append(result)
         m = self.workers.get(result.worker_id)
+        action = None
         if m is not None:
-            m.outstanding.pop(result.action_id, None)
+            action = m.outstanding.pop(result.action_id, None)
+            m.missed_results = 0     # the worker is responsive again
             g = m.gpus[result.gpu_id]
             if result.action_type == ActionType.LOAD:
                 g.loading.discard(result.model_id)
@@ -251,6 +270,16 @@ class Controller:
             elif result.action_type in EXEC_TYPES:
                 g.exec_free_at = self._pending_free_at(
                     m, result.gpu_id, EXEC_TYPES, result.t_end)
+        # telemetry: predicted-vs-actual record + span phase stamps
+        predicted = action.expected_duration if action is not None else None
+        self.recorder.record_action(result, predicted)
+        if result.status is ResultStatus.SUCCESS:
+            if result.action_type in EXEC_TYPES:
+                self.recorder.span_exec(result.request_ids, result.t_start,
+                                        result.t_end)
+            elif result.action_type == ActionType.LOAD:
+                self.recorder.span_load(result.model_id, result.t_start,
+                                        result.t_end)
         if result.status is ResultStatus.SUCCESS and result.duration > 0:
             self.profiler.observe(result.action_type.value, result.model_id,
                                   result.batch_size, result.duration)
@@ -299,3 +328,7 @@ class Controller:
         return dict(self.stats, total=len(self.completed),
                     p50=pct(0.50), p99=pct(0.99), p999=pct(0.999),
                     max=lat[-1] if lat else float("nan"))
+
+    def telemetry_report(self) -> dict:
+        """Latency breakdown + prediction-error summary from the Recorder."""
+        return summarize_run(self.recorder)

@@ -53,6 +53,14 @@ class ActionProfiler:
         e = self.estimate(action_type, model_id, batch)
         return default if e is None else e
 
+    def history(self) -> Dict[Key, list]:
+        """Snapshot of the observation windows — the hook ProfileStore uses
+        to fold a live run's measurements back into the persistent store."""
+        return {k: list(dq) for k, dq in self._hist.items() if dq}
+
+    def seeds(self) -> Dict[Key, float]:
+        return dict(self._seed)
+
     def known_batches(self, action_type: str, model_id: str):
         out = set()
         for (a, m, b) in self._hist:

@@ -171,6 +171,7 @@ class Worker:
     def receive(self, action: Action):
         if not self.alive:
             return
+        action.received_at = self.loop.now()
         lane = "LOAD" if action.type in (ActionType.LOAD,
                                          ActionType.UNLOAD) else "EXEC"
         self.execs[(action.gpu_id, lane)].submit(action)
@@ -217,7 +218,8 @@ class Worker:
                    gpu_id=action.gpu_id, status=status, t_start=t_start,
                    t_end=t_end, duration=duration,
                    batch_size=action.batch_size,
-                   request_ids=action.request_ids)
+                   request_ids=action.request_ids,
+                   t_received=action.received_at)
         self.loop.schedule_in(self.result_delay, lambda: self.on_result(r))
 
     # -------------------------------------------------- telemetry

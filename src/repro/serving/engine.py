@@ -6,11 +6,16 @@ live in host memory and LOAD places them on device, EXEC runs exactly one
 XLA program at a time. Execution times are measured and fed back to the
 controller's profiler — on CPU they are noisier than a TPU (document the
 Fig-2 analogue caveat), but the machinery is identical.
+
+Profiles are persistent: `seed_from_store` / `seed_engines` load a
+ProfileStore written by the offline profiler CLI
+(`python -m repro.telemetry.profiler`), so repeat runs perform zero
+warmup re-measurements (`warmup_count` stays 0).
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +24,7 @@ import numpy as np
 from repro.core.worker import ModelDef
 from repro.models import params as pspec
 from repro.models.resnet import resnet50_forward, resnet50_spec
+from repro.telemetry.profile_store import ProfileStore
 
 
 class JaxModel:
@@ -36,6 +42,9 @@ class JaxModel:
         self.batches = tuple(sorted(batches))
         self._jitted = {b: jax.jit(forward) for b in self.batches}
         self._measured: Dict[Tuple[str, int], float] = {}
+        self._load_s: Optional[float] = None
+        self._fresh: set = set()     # keys measured in-process (not echoes)
+        self.warmup_count = 0        # timed profiling measurements performed
 
     def load(self) -> float:
         t0 = time.perf_counter()
@@ -62,20 +71,87 @@ class JaxModel:
         jax.block_until_ready(out)
         return time.perf_counter() - t0
 
-    def warmup(self, reps: int = 3):
+    def compile(self):
+        """AOT-compile every batch bucket without recording timings —
+        compilation is not warmup re-measurement (paper §5.1: kernels are
+        compiled ahead of time; profiles come from the ProfileStore)."""
         if self.device_params is None:
             self.load()
         for b in self.batches:
-            durs = [self.run(b) for _ in range(reps + 1)][1:]  # drop compile
-            self._measured[("INFER", b)] = float(np.median(durs))
+            x = self.make_input(b)
+            jax.block_until_ready(self._jitted[b](self.device_params, x))
+
+    # ------------------------------------------------------ profiling
+    def measure(self, reps: int = 3) -> Dict[Tuple[str, int], list]:
+        """Timed sweep over batch buckets; returns raw durations per
+        ("INFER", batch). The first rep per bucket (compile) is dropped."""
+        if self.device_params is None:
+            self.load()
+        out = {}
+        for b in self.batches:
+            durs = [self.run(b) for _ in range(reps + 1)][1:]
+            self.warmup_count += reps + 1
+            out[("INFER", b)] = durs
+        return out
+
+    def measure_load(self, reps: int = 2) -> List[float]:
+        """Timed host->device weight transfers (the LOAD profile)."""
+        durs = []
+        for _ in range(max(1, reps)):
+            self.unload()
+            durs.append(max(self.load(), 1e-5))
+            self.warmup_count += 1
+        self._load_s = float(np.median(durs))
+        self._fresh.add(("LOAD", 1))
+        return durs
+
+    def warmup(self, reps: int = 3):
+        for (t, b), durs in self.measure(reps=reps).items():
+            self._measured[(t, b)] = float(np.median(durs))
+            self._fresh.add((t, b))
+
+    def apply_profile(self, entries: Dict[Tuple[str, int], float]):
+        """Seed measurements from persisted profiles — {("INFER", batch)
+        or ("LOAD", 1): seconds} — so no warmup re-measurement happens."""
+        for (t, b), d in entries.items():
+            if t == "LOAD":
+                self._load_s = float(d)
+            else:
+                self._measured[(t, b)] = float(d)
+            self._fresh.discard((t, b))
+
+    def seed_from_store(self, store: ProfileStore) -> bool:
+        """Seed from a ProfileStore; returns False (and seeds nothing) if
+        any of this model's batch buckets is missing from the store."""
+        entries = {}
+        for b in self.batches:
+            p = store.get("INFER", self.model_id, b)
+            if p is None:
+                return False
+            entries[("INFER", b)] = p.estimate
+        lp = store.get("LOAD", self.model_id, 1)
+        if lp is not None:
+            entries[("LOAD", 1)] = lp.estimate
+        self.apply_profile(entries)
+        return True
 
     def seed_profiles(self) -> dict:
         if not self._measured:
             self.warmup()
         out = {("INFER", self.model_id, b): d
                for (_, b), d in self._measured.items()}
-        out[("LOAD", self.model_id, 1)] = max(self.load(), 1e-5)
+        if self._load_s is None:
+            self.measure_load(reps=1)
+        out[("LOAD", self.model_id, 1)] = self._load_s
         return out
+
+    def fresh_profiles(self) -> dict:
+        """Like seed_profiles(), restricted to values measured in this
+        process — store-seeded echoes are excluded, so folding these back
+        into a ProfileStore can never recycle its own estimates."""
+        return {(t, mid, b): d
+                for (t, mid, b), d in self.seed_profiles().items()
+                if (t, b) in self._fresh}
 
     def modeldef(self) -> ModelDef:
         if not self._measured:
@@ -101,6 +177,40 @@ class JaxBackend:
 
     def exec_duration(self, model: ModelDef, action) -> float:
         return max(self.models[model.model_id].run(action.batch_size), 1e-6)
+
+
+def seed_engines(engines: Dict[str, JaxModel],
+                 store: Optional[ProfileStore] = None) -> dict:
+    """Seed every engine's profiles — from `store` when it covers the
+    engine's buckets (zero warmup re-measurement), measuring otherwise —
+    and return the combined (type, model, batch) -> secs dict that
+    `Controller.add_worker(profiles=...)` takes."""
+    profiles = {}
+    for e in engines.values():
+        if store is not None:
+            e.seed_from_store(store)
+        profiles.update(e.seed_profiles())
+    return profiles
+
+
+def update_store(engines: Dict[str, JaxModel], store: ProfileStore,
+                 controller=None) -> ProfileStore:
+    """Shutdown path: fold measured engine profiles and (optionally) the
+    controller's live telemetry back into the persistent store.
+
+    Only values actually measured this run (fresh_profiles) are folded —
+    a store-seeded engine's seed_profiles() merely echoes the store's own
+    estimates, and folding those back would let stale values masquerade
+    as fresh samples. Live telemetry is folded from the Recorder only:
+    the ActionProfiler's windows hold the same durations and would
+    double-count them.
+    """
+    for e in engines.values():
+        for (t, mid, b), d in e.fresh_profiles().items():
+            store.update(t, mid, b, [d])
+    if controller is not None:
+        store.update_from_recorder(controller.recorder)
+    return store
 
 
 def make_resnet_model(model_id: str, scale: int = 16, img: int = 64,

@@ -18,6 +18,8 @@ from repro.core.clock import EventLoop, VirtualClock
 from repro.core.controller import Controller
 from repro.core.scheduler import ClockworkScheduler
 from repro.core.worker import ModelDef, SimBackend, Worker
+from repro.telemetry.profile_store import ProfileStore
+from repro.telemetry.recorder import Recorder
 
 # --- paper Table 1 (v100, TVM 0.7): model -> (weights MB, B1,B2,B4,B8,B16 ms)
 PAPER_TABLE1 = {
@@ -81,6 +83,24 @@ class Cluster:
         self.loop.run_until(t_end)
         return self.controller.summary()
 
+    # --------------------------------------------------------- telemetry
+    @property
+    def recorder(self) -> Recorder:
+        return self.controller.recorder
+
+    def telemetry_report(self) -> dict:
+        """Latency breakdown + prediction-error report for this run."""
+        return self.controller.telemetry_report()
+
+    def export_profile_store(self) -> ProfileStore:
+        """Fold this run's telemetry into a fresh ProfileStore (the
+        shutdown-time persistence hook). Recorder records only — the
+        ActionProfiler's windows hold the same durations and would be
+        double-counted."""
+        store = ProfileStore()
+        store.update_from_recorder(self.recorder)
+        return store
+
 
 def build_cluster(models: Dict[str, ModelDef], *, n_workers: int = 1,
                   gpus_per_worker: int = 1, scheduler=None,
@@ -88,12 +108,17 @@ def build_cluster(models: Dict[str, ModelDef], *, n_workers: int = 1,
                   noise: float = 0.0003, spike_prob: float = 0.0,
                   spike_scale: float = 5.0,
                   action_delay: float = 0.0005, seed: int = 0,
-                  preload: Optional[List[str]] = None) -> Cluster:
+                  preload: Optional[List[str]] = None,
+                  profile_store: Optional[ProfileStore] = None,
+                  recorder: Optional[Recorder] = None) -> Cluster:
     loop = EventLoop(VirtualClock())
     sched = scheduler if scheduler is not None else ClockworkScheduler()
     workers = []
-    controller = Controller(loop, models, sched, action_delay=action_delay)
-    profiles = seed_profiles(models, host_to_dev_bw)
+    controller = Controller(loop, models, sched, action_delay=action_delay,
+                            recorder=recorder)
+    # persisted profiles win over the synthetic ground-truth-derived seeds
+    profiles = profile_store.seed_dict() if profile_store is not None \
+        else seed_profiles(models, host_to_dev_bw)
     for i in range(n_workers):
         backend = SimBackend(host_to_dev_bw=host_to_dev_bw, noise=noise,
                              spike_prob=spike_prob, spike_scale=spike_scale,

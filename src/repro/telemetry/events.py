@@ -1,0 +1,98 @@
+"""Telemetry event records (§6 "telemetry" / Fig 2, Fig 9 inputs).
+
+Two record types cover everything the paper's figures need:
+
+* RequestSpan — the life of one request through the controller: arrival,
+  queue admission, dispatch into an EXEC action, the (optional) cold-start
+  LOAD that blocked it, on-device execution, and the response. Spans are
+  opened by `Controller.on_request` and closed by `complete`/`reject`.
+* ActionRecord — one controller<->worker action round-trip with the
+  *predicted* duration (the estimate the scheduler committed to) next to
+  the *actual* measured duration. Fig 9's over/under prediction-error CDFs
+  are computed from these.
+
+Records are plain dataclasses with a `to_dict()` for JSONL export; they
+deliberately import nothing from `repro.core` so the dependency points
+core -> telemetry only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+NAN = float("nan")
+
+
+@dataclasses.dataclass
+class RequestSpan:
+    """Per-request latency breakdown timestamps (all seconds, loop clock)."""
+    request_id: int
+    model_id: str
+    arrival: float
+    slo: float
+    queued: float = NAN        # controller accepted it into the scheduler
+    dispatched: float = NAN    # last EXEC action carrying it was sent
+    load_start: float = NAN    # cold-start LOAD that unblocked it (if any)
+    load_end: float = NAN
+    exec_start: float = NAN    # on-device execution window
+    exec_end: float = NAN
+    response: float = NAN      # completion/rejection time
+    status: Optional[str] = None   # "ok" | "timeout" | "rejected"
+    worker_id: Optional[str] = None
+    gpu_id: int = -1
+    batch_size: int = 0
+    attempts: int = 0          # dispatch count (>1 => requeued after reject)
+    cold_start: bool = False
+
+    # ---------------------------------------------------------- breakdown
+    @property
+    def queue_delay(self) -> float:
+        ref = self.dispatched if not math.isnan(self.dispatched) \
+            else self.response
+        return ref - self.arrival
+
+    @property
+    def exec_time(self) -> float:
+        return self.exec_end - self.exec_start
+
+    @property
+    def total(self) -> float:
+        return self.response - self.arrival
+
+    def to_dict(self) -> dict:
+        # never-stamped phases export as null, keeping the JSONL strict
+        return {k: (None if isinstance(v, float) and math.isnan(v) else v)
+                for k, v in dataclasses.asdict(self).items()}
+
+
+@dataclasses.dataclass
+class ActionRecord:
+    """One action's predicted vs actual duration (+ worker-side stamps)."""
+    action_id: int
+    action_type: str
+    model_id: str
+    worker_id: str
+    gpu_id: int
+    batch_size: int
+    status: str
+    t_received: float          # worker received the action
+    t_start: float             # execution began
+    t_end: float               # result emitted
+    actual: float              # measured on-device duration
+    predicted: Optional[float] = None   # scheduler's committed estimate
+    request_ids: Tuple[int, ...] = ()
+
+    @property
+    def error(self) -> Optional[float]:
+        """predicted - actual; positive => over-prediction (actual faster)."""
+        if self.predicted is None:
+            return None
+        return self.predicted - self.actual
+
+    @property
+    def worker_queue_delay(self) -> float:
+        return self.t_start - self.t_received
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)

@@ -1,0 +1,130 @@
+"""Low-overhead telemetry recorder (ring buffers + JSONL export).
+
+The Recorder is the single sink for the controller's telemetry stream.
+Hot-path cost is one dict lookup plus attribute writes per event; storage
+is two bounded deques (ring buffers), so a sustained run can never grow
+memory without bound — old records are dropped and counted instead.
+
+Event flow (see DESIGN.md §3):
+
+    on_request ──► span_open
+    send_action ─► span_dispatch          (EXEC actions carrying requests)
+    on_result ───► record_action          (every result => ActionRecord)
+               ├─► span_exec              (successful EXEC)
+               └─► span_load              (successful LOAD => cold-start
+                                           attribution to waiting spans)
+    complete/reject ─► span_close
+"""
+from __future__ import annotations
+
+import collections
+import json
+import math
+from typing import Dict, Iterable, Optional
+
+from repro.telemetry.events import ActionRecord, RequestSpan
+
+
+class Recorder:
+    def __init__(self, capacity: int = 65536):
+        self.capacity = capacity
+        self.actions: collections.deque = collections.deque(maxlen=capacity)
+        self.spans: collections.deque = collections.deque(maxlen=capacity)
+        self._open: Dict[int, RequestSpan] = {}
+        self.dropped_actions = 0
+        self.dropped_spans = 0
+
+    # ------------------------------------------------------------- spans
+    def span_open(self, req, queued: float):
+        """Open a span at controller admission. `req` is duck-typed
+        (needs id/model_id/arrival/slo)."""
+        self._open[req.id] = RequestSpan(
+            request_id=req.id, model_id=req.model_id, arrival=req.arrival,
+            slo=req.slo, queued=queued)
+
+    def span_dispatch(self, request_ids, when: float, worker_id: str,
+                      gpu_id: int, batch_size: int):
+        for rid in request_ids:
+            s = self._open.get(rid)
+            if s is None:
+                continue
+            s.dispatched = when
+            s.worker_id = worker_id
+            s.gpu_id = gpu_id
+            s.batch_size = batch_size
+            s.attempts += 1
+
+    def span_exec(self, request_ids, t_start: float, t_end: float):
+        for rid in request_ids:
+            s = self._open.get(rid)
+            if s is not None:
+                s.exec_start = t_start
+                s.exec_end = t_end
+
+    def span_load(self, model_id: str, t_start: float, t_end: float):
+        """Attribute a completed LOAD to the requests it unblocked: open
+        spans of that model still waiting to be dispatched. Already-
+        dispatched spans were served by an existing replica — a
+        replication LOAD elsewhere is not their cold start."""
+        for s in self._open.values():
+            if s.model_id == model_id and math.isnan(s.dispatched) \
+                    and math.isnan(s.load_start):
+                s.load_start = t_start
+                s.load_end = t_end
+                s.cold_start = True
+
+    def span_close(self, req, when: float):
+        s = self._open.pop(req.id, None)
+        if s is None:
+            return None
+        s.response = when
+        s.status = req.status
+        if len(self.spans) == self.capacity:
+            self.dropped_spans += 1
+        self.spans.append(s)
+        return s
+
+    # ----------------------------------------------------------- actions
+    def record_action(self, result, predicted: Optional[float]):
+        """Build an ActionRecord from a worker Result (duck-typed)."""
+        if len(self.actions) == self.capacity:
+            self.dropped_actions += 1
+        rec = ActionRecord(
+            action_id=result.action_id,
+            action_type=getattr(result.action_type, "value",
+                                str(result.action_type)),
+            model_id=result.model_id, worker_id=result.worker_id,
+            gpu_id=result.gpu_id, batch_size=result.batch_size,
+            status=getattr(result.status, "value", str(result.status)),
+            t_received=getattr(result, "t_received", 0.0),
+            t_start=result.t_start, t_end=result.t_end,
+            actual=result.duration, predicted=predicted,
+            request_ids=tuple(result.request_ids))
+        self.actions.append(rec)
+        return rec
+
+    # ------------------------------------------------------------ export
+    def iter_actions(self) -> Iterable[ActionRecord]:
+        return iter(self.actions)
+
+    def iter_spans(self) -> Iterable[RequestSpan]:
+        return iter(self.spans)
+
+    def export_jsonl(self, path: str) -> int:
+        """Write closed spans + action records as JSONL; returns #lines."""
+        n = 0
+        with open(path, "w") as f:
+            for s in self.spans:
+                f.write(json.dumps({"kind": "span", **s.to_dict()},
+                                   allow_nan=False) + "\n")
+                n += 1
+            for a in self.actions:
+                f.write(json.dumps({"kind": "action", **a.to_dict()},
+                                   allow_nan=False) + "\n")
+                n += 1
+        return n
+
+    def clear(self):
+        self.actions.clear()
+        self.spans.clear()
+        self._open.clear()

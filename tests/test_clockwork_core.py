@@ -1,5 +1,7 @@
 """Unit + property tests for the Clockwork core (scheduler invariants)."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.actions import Action, ActionType, Request, ResultStatus
