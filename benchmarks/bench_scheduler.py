@@ -1,0 +1,180 @@
+"""Control-plane perf benchmark: per-tick scheduler latency vs model count.
+
+Sweeps the number of served models (10 -> 2,000) under an open-loop load on
+a multi-GPU simulated cluster and measures the wall-clock latency of every
+`ClockworkScheduler.tick()` via the `scheduler.tick_latency_s` telemetry
+gauge. With `--compare` (the default for the committed baseline) it also
+runs the frozen pre-optimization scheduler
+(`repro.core.scheduler_reference.ReferenceClockworkScheduler`) on the same
+workload, asserts the two made *identical* decisions (goodput / timeout /
+reject counts), and reports the speedup.
+
+Output: BENCH_scheduler.json (see DESIGN.md §4 for how to read/update it).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_scheduler.py            # full
+    PYTHONPATH=src python benchmarks/bench_scheduler.py --smoke    # CI
+    ... [--no-compare] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+from repro.core.scheduler import TICK_LATENCY_GAUGE, ClockworkScheduler
+from repro.core.scheduler_reference import ReferenceClockworkScheduler
+from repro.serving.simulator import PAPER_TABLE1, build_cluster, table1_modeldef
+from repro.serving.workload import OpenLoopClient
+from repro.telemetry.reports import quantile
+
+FAMILIES = list(PAPER_TABLE1)
+
+# model-count sweep; reference comparison points are a subset because the
+# pre-optimization scheduler is painfully slow at scale (that's the point)
+FULL_SWEEP = (10, 100, 250, 500, 1000, 2000)
+FULL_COMPARE = (10, 100, 1000, 2000)
+SMOKE_SWEEP = (10, 50)
+SMOKE_COMPARE = (10, 50)
+
+
+def _timed(cls):
+    """Wrap a scheduler class to sample tick() wall latency uniformly for
+    both implementations (the optimized one also self-reports via the
+    telemetry gauge; the frozen reference predates it)."""
+    class Timed(cls):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.tick_samples = []
+
+        def tick(self):
+            t0 = time.perf_counter()
+            super().tick()
+            self.tick_samples.append(time.perf_counter() - t0)
+
+    return Timed
+
+
+def run_repeated(sched_cls, n_models: int, repeats: int, **kw) -> dict:
+    """Median-of-N runs (by mean tick latency) — the simulations are
+    deterministic, so repeats differ only by host noise."""
+    runs = sorted((run_once(sched_cls, n_models, **kw)
+                   for _ in range(repeats)),
+                  key=lambda r: r["mean_tick_us"])
+    return runs[len(runs) // 2]
+
+
+def run_once(sched_cls, n_models: int, *, duration: float = 0.5,
+             rate_per_model: float = 4.0, n_workers: int = 2,
+             gpus_per_worker: int = 4, seed: int = 0) -> dict:
+    models = {f"m{i}": table1_modeldef(f"m{i}",
+                                       family=FAMILIES[i % len(FAMILIES)])
+              for i in range(n_models)}
+    sched = _timed(sched_cls)()
+    cl = build_cluster(models, scheduler=sched, seed=seed,
+                       preload=[f"m{i}" for i in range(n_models // 2)],
+                       n_workers=n_workers, gpus_per_worker=gpus_per_worker)
+    clients = [OpenLoopClient(cl.loop, cl.submit, mid, 0.100,
+                              rate=rate_per_model, stop=duration,
+                              seed=seed + i)
+               for i, mid in enumerate(models)]
+    cl.attach_clients(clients)
+    t0 = time.perf_counter()
+    summary = cl.run(duration)
+    wall = time.perf_counter() - t0
+    xs = sched.tick_samples
+    return {
+        "ticks": len(xs),
+        "mean_tick_us": 1e6 * sum(xs) / max(len(xs), 1),
+        "p99_tick_us": 1e6 * quantile(xs, 0.99),
+        "max_tick_us": 1e6 * max(xs) if xs else 0.0,
+        "wall_s": wall,
+        "decisions": {k: summary[k]
+                      for k in ("goodput", "timeout", "rejected")},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, not minutes)")
+    ap.add_argument("--no-compare", action="store_true",
+                    help="skip the pre-optimization reference runs")
+    ap.add_argument("--out", default="BENCH_scheduler.json")
+    ap.add_argument("--duration", type=float, default=0.5,
+                    help="simulated seconds per point")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="runs per point, median reported "
+                         "(default 3, 1 with --smoke)")
+    args = ap.parse_args(argv)
+    repeats = args.repeats if args.repeats else (1 if args.smoke else 3)
+
+    sweep = SMOKE_SWEEP if args.smoke else FULL_SWEEP
+    compare_at = () if args.no_compare else (
+        SMOKE_COMPARE if args.smoke else FULL_COMPARE)
+
+    # warm the interpreter (allocator, bytecode caches) so the first sweep
+    # point isn't charged for cold-start effects
+    run_once(ClockworkScheduler, 10, duration=0.05)
+    run_once(ReferenceClockworkScheduler, 10, duration=0.05)
+
+    results = []
+    for n in sweep:
+        opt = run_repeated(ClockworkScheduler, n, repeats,
+                           duration=args.duration)
+        row = {"n_models": n, "optimized": opt}
+        if n in compare_at:
+            ref = run_repeated(ReferenceClockworkScheduler, n, repeats,
+                               duration=args.duration)
+            row["reference"] = ref
+            row["speedup_mean_tick"] = (
+                ref["mean_tick_us"] / opt["mean_tick_us"]
+                if opt["mean_tick_us"] else float("inf"))
+            row["decisions_identical"] = (
+                opt["decisions"] == ref["decisions"])
+        results.append(row)
+        extra = ""
+        if "reference" in row:
+            extra = (f"  ref={row['reference']['mean_tick_us']:8.1f}us"
+                     f"  speedup={row['speedup_mean_tick']:5.1f}x"
+                     f"  identical={row['decisions_identical']}")
+        print(f"n={n:5d}  opt mean={opt['mean_tick_us']:8.1f}us"
+              f"  p99={opt['p99_tick_us']:8.1f}us{extra}")
+
+    out = {
+        "bench": "scheduler_tick_latency",
+        "mode": "smoke" if args.smoke else "full",
+        "config": {"duration_s": args.duration, "rate_per_model": 4.0,
+                   "n_workers": 2, "gpus_per_worker": 4,
+                   "slo_s": 0.100, "repeats_median_of": repeats,
+                   "gauge": TICK_LATENCY_GAUGE},
+        "host": {"python": platform.python_version(),
+                 "machine": platform.machine()},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    bad = [r for r in results if not r.get("decisions_identical", True)]
+    return 1 if bad else 0
+
+
+def run(quick: bool = False):
+    """benchmarks.run entry point — writes under experiments/bench so the
+    committed repo-root baseline is only updated deliberately."""
+    import os
+
+    from benchmarks.common import OUT_DIR
+    os.makedirs(OUT_DIR, exist_ok=True)
+    argv = ["--out", os.path.join(OUT_DIR, "BENCH_scheduler.json")]
+    if quick:
+        argv.append("--smoke")
+    main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Simulator throughput benchmark: how fast the discrete-event control
+plane replays paper-scale serving workloads.
+
+Sweeps (model count, aggregate request rate) points, runs the full
+controller + workers + clients stack on the virtual clock, and reports:
+
+  * requests simulated per wall-clock second (completed + rejected),
+  * event-loop events dispatched per wall-clock second (`EventLoop.stats`),
+  * simulated-seconds per wall-second (time compression ratio),
+  * mean/p99 scheduler tick latency from the telemetry gauge stream.
+
+Output: BENCH_simulator.json (see DESIGN.md §4 for how to read/update it).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_simulator.py            # full
+    PYTHONPATH=src python benchmarks/bench_simulator.py --smoke    # CI
+    ... [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+from repro.core.scheduler import TICK_LATENCY_GAUGE, ClockworkScheduler
+from repro.serving.simulator import PAPER_TABLE1, build_cluster, table1_modeldef
+from repro.serving.workload import OpenLoopClient
+from repro.telemetry.reports import quantile
+
+FAMILIES = list(PAPER_TABLE1)
+
+#            (n_models, total request rate r/s)
+FULL_SWEEP = ((10, 500.0), (100, 1000.0), (500, 2000.0), (1000, 4000.0))
+SMOKE_SWEEP = ((10, 200.0),)
+
+
+def run_once(n_models: int, total_rate: float, *, duration: float = 2.0,
+             n_workers: int = 2, gpus_per_worker: int = 4,
+             seed: int = 0) -> dict:
+    models = {f"m{i}": table1_modeldef(f"m{i}",
+                                       family=FAMILIES[i % len(FAMILIES)])
+              for i in range(n_models)}
+    cl = build_cluster(models, scheduler=ClockworkScheduler(), seed=seed,
+                       preload=[f"m{i}" for i in range(n_models // 2)],
+                       n_workers=n_workers, gpus_per_worker=gpus_per_worker)
+    rate = total_rate / n_models
+    clients = [OpenLoopClient(cl.loop, cl.submit, mid, 0.100, rate=rate,
+                              stop=duration, seed=seed + i)
+               for i, mid in enumerate(models)]
+    cl.attach_clients(clients)
+    t0 = time.perf_counter()
+    summary = cl.run(duration)
+    wall = time.perf_counter() - t0
+    loop_stats = cl.loop.stats()
+    ticks = [g.value for g in cl.recorder.iter_gauges(TICK_LATENCY_GAUGE)]
+    requests = summary["total"]
+    return {
+        "n_models": n_models,
+        "total_rate_rs": total_rate,
+        "sim_seconds": duration,
+        "wall_s": wall,
+        "requests": requests,
+        "requests_per_wall_s": requests / wall if wall > 0 else 0.0,
+        "events_per_wall_s": loop_stats["events_per_wall_s"],
+        "events_total": loop_stats["events_total"],
+        "sim_s_per_wall_s": duration / wall if wall > 0 else 0.0,
+        "mean_tick_us": 1e6 * sum(ticks) / max(len(ticks), 1),
+        "p99_tick_us": 1e6 * quantile(ticks, 0.99),
+        "decisions": {k: summary[k]
+                      for k in ("goodput", "timeout", "rejected")},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_simulator.json")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="simulated seconds per point")
+    args = ap.parse_args(argv)
+
+    sweep = SMOKE_SWEEP if args.smoke else FULL_SWEEP
+    duration = 0.5 if args.smoke else args.duration
+
+    # cold-start warmup, not measured
+    run_once(10, 100.0, duration=0.05)
+
+    results = []
+    for n, rate in sweep:
+        row = run_once(n, rate, duration=duration)
+        results.append(row)
+        print(f"n={n:5d} rate={rate:7.0f}r/s  "
+              f"req/wall-s={row['requests_per_wall_s']:10.0f}  "
+              f"events/wall-s={row['events_per_wall_s']:10.0f}  "
+              f"sim-s/wall-s={row['sim_s_per_wall_s']:6.2f}  "
+              f"tick mean={row['mean_tick_us']:7.1f}us")
+
+    out = {
+        "bench": "simulator_throughput",
+        "mode": "smoke" if args.smoke else "full",
+        "config": {"duration_s": duration, "n_workers": 2,
+                   "gpus_per_worker": 4, "slo_s": 0.100},
+        "host": {"python": platform.python_version(),
+                 "machine": platform.machine()},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+def run(quick: bool = False):
+    """benchmarks.run entry point — writes under experiments/bench so the
+    committed repo-root baseline is only updated deliberately."""
+    import os
+
+    from benchmarks.common import OUT_DIR
+    os.makedirs(OUT_DIR, exist_ok=True)
+    argv = ["--out", os.path.join(OUT_DIR, "BENCH_simulator.json")]
+    if quick:
+        argv.append("--smoke")
+    main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

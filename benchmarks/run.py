@@ -15,11 +15,14 @@ import traceback
 
 def main() -> None:
     quick = os.environ.get("BENCH_QUICK", "0") == "1"
-    from benchmarks import (fig2_predictability, fig5_goodput_vs_slo,
+    from benchmarks import (bench_scheduler, bench_simulator,
+                            fig2_predictability, fig5_goodput_vs_slo,
                             fig6_scale_up, fig7_slo_ladder, fig8_maf_trace,
                             fig9_prediction_error, lm_serving_v5e, roofline,
                             table1_model_profiles)
     benches = [
+        ("bench_scheduler", bench_scheduler.run),
+        ("bench_simulator", bench_simulator.run),
         ("fig2_predictability", fig2_predictability.run),
         ("table1_model_profiles", table1_model_profiles.run),
         ("fig5_goodput_vs_slo", fig5_goodput_vs_slo.run),

@@ -46,6 +46,10 @@ class EventLoop:
         self.clock = clock if clock is not None else VirtualClock()
         self._heap = []
         self._seq = itertools.count()
+        # throughput telemetry: events dispatched + wall time spent inside
+        # run_until/run_all (virtual-clock runs: simulated events per wall s)
+        self.events_total = 0
+        self.wall_busy_s = 0.0
 
     def now(self) -> float:
         return self.clock.now()
@@ -63,20 +67,40 @@ class EventLoop:
         return self._heap[0][0] if self._heap else None
 
     def run_until(self, t_end: float, max_events: int = 100_000_000):
+        heap = self._heap
+        pop = heapq.heappop
+        advance = self.clock.advance_to
         n = 0
-        while self._heap and self._heap[0][0] <= t_end and n < max_events:
-            t, _, fn = heapq.heappop(self._heap)
-            self.clock.advance_to(t)
+        t0 = time.perf_counter()
+        while heap and heap[0][0] <= t_end and n < max_events:
+            t, _, fn = pop(heap)
+            advance(t)
             fn()
             n += 1
-        self.clock.advance_to(t_end)
+        advance(t_end)
+        self.events_total += n
+        self.wall_busy_s += time.perf_counter() - t0
         return n
 
     def run_all(self, max_events: int = 100_000_000):
+        heap = self._heap
+        pop = heapq.heappop
+        advance = self.clock.advance_to
         n = 0
-        while self._heap and n < max_events:
-            t, _, fn = heapq.heappop(self._heap)
-            self.clock.advance_to(t)
+        t0 = time.perf_counter()
+        while heap and n < max_events:
+            t, _, fn = pop(heap)
+            advance(t)
             fn()
             n += 1
+        self.events_total += n
+        self.wall_busy_s += time.perf_counter() - t0
         return n
+
+    def stats(self) -> dict:
+        """Event-loop throughput gauges for telemetry reports."""
+        w = self.wall_busy_s
+        return {"events_total": self.events_total,
+                "wall_busy_s": w,
+                "events_per_wall_s": (self.events_total / w) if w > 0
+                else 0.0}

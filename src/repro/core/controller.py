@@ -37,6 +37,10 @@ class GpuMirror:
     loading: set = dataclasses.field(default_factory=set)
     exec_free_at: float = 0.0
     load_free_at: float = 0.0
+    # expected completion of in-flight actions by lane (action_id -> t);
+    # replaces the per-result scan over every outstanding action
+    pending_exec: Dict[int, float] = dataclasses.field(default_factory=dict)
+    pending_load: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 class WorkerMirror:
@@ -78,6 +82,15 @@ class Controller:
         self.workers: Dict[str, WorkerMirror] = {}
         self.profiler = ActionProfiler()
         self.requests: Dict[int, Request] = {}
+        # cluster-wide residency index over the mirrors: model -> set of
+        # (worker_id, gpu_id); kept in sync by PageCache change hooks so the
+        # scheduler's LOAD allocation never scans every GPU per model.
+        # _gpu_ord ranks GPU keys in worker-registration order so index
+        # lookups can be ordered exactly like a scan over the workers dict.
+        self._residency: Dict[str, set] = {}
+        self._res_ver: Dict[str, int] = {}   # bumped on any residency change
+        self._gpu_ord: Dict[tuple, int] = {}
+        self._gpu_ord_seq = 0
         self.on_response: Optional[Callable[[Request], None]] = None
         self.tick_interval = 0.001
         self._ticker_on = False
@@ -97,6 +110,12 @@ class Controller:
         m = WorkerMirror(worker)
         self.workers[worker.worker_id] = m
         worker.on_result = self.on_result
+        for gid in m.gpu_ids():
+            key = (worker.worker_id, gid)
+            self._gpu_ord[key] = self._gpu_ord_seq
+            self._gpu_ord_seq += 1
+            m.gpus[gid].pagecache.on_resident_change = \
+                self._residency_hook(key)
         if profiles:
             for (t, mid, b), d in profiles.items():
                 self.profiler.seed(t, mid, b, d)
@@ -107,10 +126,38 @@ class Controller:
         """Seed action profiles from a persistent ProfileStore — the
         startup path that replaces per-process warmup re-measurement."""
         store.seed_profiler(self.profiler)
+        # new seeds invalidate any estimates the scheduler has cached
+        self.scheduler.on_topology_change()
 
     def remove_worker(self, worker_id: str):
         """Graceful removal (elastic scale-down)."""
         self._kill_mirror(worker_id, graceful=True)
+
+    def _residency_hook(self, key):
+        def hook(model_id: str, added: bool):
+            self._res_ver[model_id] = self._res_ver.get(model_id, 0) + 1
+            if added:
+                s = self._residency.get(model_id)
+                if s is None:
+                    s = self._residency[model_id] = set()
+                s.add(key)
+            else:
+                s = self._residency.get(model_id)
+                if s is not None:
+                    s.discard(key)
+                    if not s:
+                        del self._residency[model_id]
+        return hook
+
+    def residency_where(self, model_id: str):
+        """GPU keys holding `model_id`, ordered exactly as a scan over the
+        workers dict (registration order) would list them."""
+        s = self._residency.get(model_id)
+        if not s:
+            return ()
+        if len(s) == 1:
+            return tuple(s)
+        return sorted(s, key=self._gpu_ord.__getitem__)
 
     def _kill_mirror(self, worker_id: str, graceful: bool = False):
         m = self.workers.pop(worker_id, None)
@@ -118,6 +165,19 @@ class Controller:
             return
         if not graceful:
             self.stats["dead_workers"] += 1
+        # purge the dead mirror's GPUs from the residency index
+        for gid in m.gpu_ids():
+            g = m.gpus[gid]
+            g.pagecache.on_resident_change = None
+            key = (worker_id, gid)
+            for mid in g.pagecache.resident:
+                self._res_ver[mid] = self._res_ver.get(mid, 0) + 1
+                s = self._residency.get(mid)
+                if s is not None:
+                    s.discard(key)
+                    if not s:
+                        del self._residency[mid]
+            self._gpu_ord.pop(key, None)
         # re-queue outstanding exec requests if their deadline still allows
         for a in m.outstanding.values():
             for rid in a.request_ids:
@@ -152,6 +212,9 @@ class Controller:
 
     # ------------------------------------------------------------ requests
     def _has_pending(self) -> bool:
+        hp = getattr(self.scheduler, "has_pending", None)
+        if hp is not None:
+            return hp()
         return any(self.scheduler.queues.values())
 
     def _ticker(self):
@@ -225,11 +288,13 @@ class Controller:
                               model.pages(g.pagecache.page_bytes))
             g.loading.add(action.model_id)
             g.load_free_at = action.expected_completion
+            g.pending_load[action.id] = action.expected_completion
         elif action.type == ActionType.UNLOAD:
             g.pagecache.free(action.model_id)
         elif action.type in EXEC_TYPES:
             g.pagecache.touch(action.model_id)
             g.exec_free_at = action.expected_completion
+            g.pending_exec[action.id] = action.expected_completion
             self.recorder.span_dispatch(action.request_ids, now,
                                         action.worker_id, action.gpu_id,
                                         action.batch_size)
@@ -265,11 +330,13 @@ class Controller:
                 g.loading.discard(result.model_id)
                 if result.status is not ResultStatus.SUCCESS:
                     g.pagecache.free(result.model_id)  # reconcile mirror
-                g.load_free_at = self._pending_free_at(
-                    m, result.gpu_id, (ActionType.LOAD,), result.t_end)
+                g.pending_load.pop(result.action_id, None)
+                g.load_free_at = max(g.pending_load.values(),
+                                     default=result.t_end)
             elif result.action_type in EXEC_TYPES:
-                g.exec_free_at = self._pending_free_at(
-                    m, result.gpu_id, EXEC_TYPES, result.t_end)
+                g.pending_exec.pop(result.action_id, None)
+                g.exec_free_at = max(g.pending_exec.values(),
+                                     default=result.t_end)
         # telemetry: predicted-vs-actual record + span phase stamps
         predicted = action.expected_duration if action is not None else None
         self.recorder.record_action(result, predicted)
@@ -298,12 +365,6 @@ class Controller:
             self._ensure_ticker()
 
     # ------------------------------------------------------------ helpers
-    def _pending_free_at(self, m: WorkerMirror, gpu_id: int, types,
-                         fallback: float) -> float:
-        pend = [a.expected_completion for a in m.outstanding.values()
-                if a.gpu_id == gpu_id and a.type in types]
-        return max(pend) if pend else fallback
-
     def loaded_gpus(self, model_id: str):
         """(worker_id, gpu_id) pairs where model is resident or loading."""
         out = []

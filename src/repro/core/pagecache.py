@@ -19,7 +19,13 @@ class PageCache:
         self.total_pages = int(total_bytes // page_bytes)
         self.free_pages = self.total_pages
         self.resident: Dict[str, int] = {}       # model_id -> pages held
-        self._lru: list = []                      # least-recent first
+        # LRU order as an insertion-ordered dict used as a set: O(1)
+        # touch/free instead of the O(n) list.remove on every EXEC
+        self._lru: Dict[str, None] = {}           # least-recent first
+        # optional hook fired when the resident *set* changes (model, added);
+        # the controller uses it to keep a cluster-wide residency index in
+        # sync with its mirrors, whoever mutates them
+        self.on_resident_change = None
 
     @staticmethod
     def pages_for(nbytes: int, page_bytes: int = PAGE_BYTES) -> int:
@@ -39,20 +45,23 @@ class PageCache:
             return False
         self.free_pages -= pages
         self.resident[model_id] = pages
-        self._lru.append(model_id)
+        self._lru[model_id] = None
+        if self.on_resident_change is not None:
+            self.on_resident_change(model_id, True)
         return True
 
     def free(self, model_id: str) -> int:
         pages = self.resident.pop(model_id, 0)
         self.free_pages += pages
-        if model_id in self._lru:
-            self._lru.remove(model_id)
+        self._lru.pop(model_id, None)
+        if pages and self.on_resident_change is not None:
+            self.on_resident_change(model_id, False)
         return pages
 
     def touch(self, model_id: str):
         if model_id in self._lru:
-            self._lru.remove(model_id)
-            self._lru.append(model_id)
+            del self._lru[model_id]
+            self._lru[model_id] = None
 
     def lru_candidate(self, exclude=()) -> Optional[str]:
         for m in self._lru:

@@ -69,13 +69,16 @@ class Cluster:
     def attach_clients(self, clients):
         self.clients.extend(clients)
         existing = self.controller.on_response
+        # bind the responder methods once — at thousands of clients the
+        # per-response hasattr sweep was a simulator hot path
+        responders = [c.on_response for c in self.clients
+                      if hasattr(c, "on_response")]
 
         def fan(req):
             if existing:
                 existing(req)
-            for c in self.clients:
-                if hasattr(c, "on_response"):
-                    c.on_response(req)
+            for r in responders:
+                r(req)
 
         self.controller.on_response = fan
 
@@ -89,8 +92,11 @@ class Cluster:
         return self.controller.recorder
 
     def telemetry_report(self) -> dict:
-        """Latency breakdown + prediction-error report for this run."""
-        return self.controller.telemetry_report()
+        """Latency breakdown + prediction-error + control-plane report for
+        this run (scheduler tick-latency gauges, event-loop throughput)."""
+        rep = self.controller.telemetry_report()
+        rep["event_loop"] = self.loop.stats()
+        return rep
 
     def export_profile_store(self) -> ProfileStore:
         """Fold this run's telemetry into a fresh ProfileStore (the

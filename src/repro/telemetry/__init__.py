@@ -1,22 +1,24 @@
 """Telemetry & profiling subsystem (see DESIGN.md §3).
 
-* events — RequestSpan / ActionRecord dataclasses
+* events — RequestSpan / ActionRecord / GaugeSample dataclasses
 * recorder — ring-buffer Recorder with JSONL export
 * profile_store — persistent (action, model, batch) -> latency profiles
 * reports — latency breakdowns, prediction-error, Table-1 tables
 * profiler — offline profiler CLI (`python -m repro.telemetry.profiler`)
 """
-from repro.telemetry.events import ActionRecord, RequestSpan
+from repro.telemetry.events import ActionRecord, GaugeSample, RequestSpan
 from repro.telemetry.profile_store import (LatencyProfile, ProfileStore,
                                            STORE_VERSION)
 from repro.telemetry.recorder import Recorder
-from repro.telemetry.reports import (latency_breakdown, latency_quantiles,
-                                     latency_summary, prediction_error_report,
+from repro.telemetry.reports import (gauge_report, latency_breakdown,
+                                     latency_quantiles, latency_summary,
+                                     prediction_error_report,
                                      profile_table, summarize_run)
 
 __all__ = [
-    "ActionRecord", "RequestSpan", "Recorder",
+    "ActionRecord", "GaugeSample", "RequestSpan", "Recorder",
     "LatencyProfile", "ProfileStore", "STORE_VERSION",
-    "latency_breakdown", "latency_quantiles", "latency_summary",
-    "prediction_error_report", "profile_table", "summarize_run",
+    "gauge_report", "latency_breakdown", "latency_quantiles",
+    "latency_summary", "prediction_error_report", "profile_table",
+    "summarize_run",
 ]

@@ -11,6 +11,13 @@ Two record types cover everything the paper's figures need:
   the *actual* measured duration. Fig 9's over/under prediction-error CDFs
   are computed from these.
 
+A third, lighter record type carries control-plane health samples:
+
+* GaugeSample — one named scalar measurement at a point in time (e.g. the
+  scheduler's per-tick wall latency `scheduler.tick_latency_s`). Gauges
+  make control-plane overhead a first-class telemetry stream so perf
+  regressions show up in `telemetry_report` and the bench harness.
+
 Records are plain dataclasses with a `to_dict()` for JSONL export; they
 deliberately import nothing from `repro.core` so the dependency points
 core -> telemetry only.
@@ -96,3 +103,14 @@ class ActionRecord:
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class GaugeSample:
+    """One named scalar sample (loop-clock timestamp, measured value)."""
+    name: str
+    t: float
+    value: float
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "t": self.t, "value": self.value}

@@ -14,6 +14,7 @@ Event flow (see DESIGN.md §3):
                └─► span_load              (successful LOAD => cold-start
                                            attribution to waiting spans)
     complete/reject ─► span_close
+    scheduler.tick ──► record_gauge       (per-tick control-plane latency)
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ import json
 import math
 from typing import Dict, Iterable, Optional
 
-from repro.telemetry.events import ActionRecord, RequestSpan
+from repro.telemetry.events import ActionRecord, GaugeSample, RequestSpan
 
 
 class Recorder:
@@ -30,17 +31,27 @@ class Recorder:
         self.capacity = capacity
         self.actions: collections.deque = collections.deque(maxlen=capacity)
         self.spans: collections.deque = collections.deque(maxlen=capacity)
+        self.gauges: Dict[str, collections.deque] = {}
         self._open: Dict[int, RequestSpan] = {}
+        # per-model view of _open so LOAD attribution touches only the
+        # spans of the loaded model, not every open span in the system
+        self._open_by_model: Dict[str, Dict[int, RequestSpan]] = {}
         self.dropped_actions = 0
         self.dropped_spans = 0
+        self.dropped_gauges = 0
 
     # ------------------------------------------------------------- spans
     def span_open(self, req, queued: float):
         """Open a span at controller admission. `req` is duck-typed
         (needs id/model_id/arrival/slo)."""
-        self._open[req.id] = RequestSpan(
+        s = RequestSpan(
             request_id=req.id, model_id=req.model_id, arrival=req.arrival,
             slo=req.slo, queued=queued)
+        self._open[req.id] = s
+        per_model = self._open_by_model.get(req.model_id)
+        if per_model is None:
+            per_model = self._open_by_model[req.model_id] = {}
+        per_model[req.id] = s
 
     def span_dispatch(self, request_ids, when: float, worker_id: str,
                       gpu_id: int, batch_size: int):
@@ -66,9 +77,8 @@ class Recorder:
         spans of that model still waiting to be dispatched. Already-
         dispatched spans were served by an existing replica — a
         replication LOAD elsewhere is not their cold start."""
-        for s in self._open.values():
-            if s.model_id == model_id and math.isnan(s.dispatched) \
-                    and math.isnan(s.load_start):
+        for s in self._open_by_model.get(model_id, {}).values():
+            if math.isnan(s.dispatched) and math.isnan(s.load_start):
                 s.load_start = t_start
                 s.load_end = t_end
                 s.cold_start = True
@@ -77,6 +87,11 @@ class Recorder:
         s = self._open.pop(req.id, None)
         if s is None:
             return None
+        per_model = self._open_by_model.get(s.model_id)
+        if per_model is not None:
+            per_model.pop(req.id, None)
+            if not per_model:
+                del self._open_by_model[s.model_id]
         s.response = when
         s.status = req.status
         if len(self.spans) == self.capacity:
@@ -103,6 +118,22 @@ class Recorder:
         self.actions.append(rec)
         return rec
 
+    # ------------------------------------------------------------ gauges
+    def record_gauge(self, name: str, t: float, value: float) -> None:
+        """Append one named control-plane sample (e.g. scheduler tick
+        latency). One dict lookup + deque append on the hot path."""
+        dq = self.gauges.get(name)
+        if dq is None:
+            dq = self.gauges[name] = collections.deque(maxlen=self.capacity)
+        if len(dq) == self.capacity:
+            self.dropped_gauges += 1
+        dq.append(GaugeSample(name=name, t=t, value=value))
+
+    def iter_gauges(self, name: Optional[str] = None):
+        if name is not None:
+            return iter(self.gauges.get(name, ()))
+        return (g for dq in self.gauges.values() for g in dq)
+
     # ------------------------------------------------------------ export
     def iter_actions(self) -> Iterable[ActionRecord]:
         return iter(self.actions)
@@ -122,9 +153,15 @@ class Recorder:
                 f.write(json.dumps({"kind": "action", **a.to_dict()},
                                    allow_nan=False) + "\n")
                 n += 1
+            for g in self.iter_gauges():
+                f.write(json.dumps({"kind": "gauge", **g.to_dict()},
+                                   allow_nan=False) + "\n")
+                n += 1
         return n
 
     def clear(self):
         self.actions.clear()
         self.spans.clear()
+        self.gauges.clear()
         self._open.clear()
+        self._open_by_model.clear()

@@ -81,11 +81,26 @@ def prediction_error_report(records: Iterable) -> dict:
     return {"over": stats(over), "under": stats(under)}
 
 
+# ----------------------------------------------------------------- gauges
+def gauge_report(recorder) -> dict:
+    """Summary stats per control-plane gauge (scheduler tick latency &c)."""
+    out = {}
+    for name, dq in getattr(recorder, "gauges", {}).items():
+        xs = [g.value for g in dq]
+        out[name] = {"n": len(xs),
+                     "mean": (sum(xs) / len(xs)) if xs else float("nan"),
+                     "p50": quantile(xs, 0.50), "p99": quantile(xs, 0.99),
+                     "max": max(xs) if xs else float("nan")}
+    return out
+
+
 def summarize_run(recorder) -> dict:
-    """One-call run summary: latency breakdown + prediction error."""
+    """One-call run summary: latency breakdown + prediction error +
+    control-plane gauges."""
     return {"breakdown": latency_breakdown(recorder.iter_spans()),
             "prediction_error": prediction_error_report(
-                recorder.iter_actions())}
+                recorder.iter_actions()),
+            "gauges": gauge_report(recorder)}
 
 
 # ------------------------------------------------------------------ store

@@ -1,0 +1,332 @@
+"""PR 2 regression suite: the incremental scheduler must make *identical*
+decisions to the frozen pre-optimization implementation, and its tick must
+stay cheap at paper-scale model counts.
+
+Covers:
+  * decision equivalence on seeded workloads (goodput/timeout/reject/action
+    counts equal between `ClockworkScheduler` and the frozen
+    `ReferenceClockworkScheduler`),
+  * `_drop_hopeless` single-pass semantics (hopeless prefix, mid-queue
+    hopeless entries, silently-dead requests),
+  * the `_demands` O(1)-per-model fix,
+  * per-model estimate memoization (profiler not re-queried per candidate),
+  * a 2,000-model tick wall-clock smoke bound,
+  * control-plane telemetry gauges (tick latency + event-loop throughput),
+  * the controller residency index staying consistent with the mirrors.
+"""
+import time
+
+import pytest
+
+from repro.core.actions import Request
+from repro.core.scheduler import TICK_LATENCY_GAUGE, ClockworkScheduler
+from repro.core.scheduler_reference import ReferenceClockworkScheduler
+from repro.serving.simulator import (PAPER_TABLE1, build_cluster,
+                                     table1_modeldef)
+from repro.serving.workload import ClosedLoopClient, OpenLoopClient
+
+FAMILIES = list(PAPER_TABLE1)
+
+
+def _models(n):
+    return {f"m{i}": table1_modeldef(f"m{i}",
+                                     family=FAMILIES[i % len(FAMILIES)])
+            for i in range(n)}
+
+
+# ------------------------------------------------------ decision equivalence
+
+WORKLOADS = [
+    # (n_models, seed, slo_s, kind) — closed-loop burst, open-loop spread,
+    # and open-loop under memory pressure (LOAD/UNLOAD churn)
+    (6, 1, 0.025, "closed"),
+    (20, 2, 0.100, "open"),
+    (12, 3, 0.050, "pressure"),
+]
+
+
+def _run_workload(sched_cls, workload):
+    n, seed, slo, kind = workload
+    models = _models(n)
+    kw = dict(device_memory=2e9) if kind == "pressure" else {}
+    cl = build_cluster(models, scheduler=sched_cls(), seed=seed, **kw)
+    clients = []
+    for i, mid in enumerate(models):
+        if kind in ("open", "pressure"):
+            clients.append(OpenLoopClient(cl.loop, cl.submit, mid, slo,
+                                          rate=30.0, stop=1.5, seed=seed + i))
+        else:
+            clients.append(ClosedLoopClient(cl.loop, cl.submit, mid, slo,
+                                            concurrency=4))
+    cl.attach_clients(clients)
+    s = cl.run(1.5)
+    # full per-action trace (absolute ids excluded — the global id counters
+    # keep running across runs): if any decision differed, batch sizes,
+    # placements, timings, or the RNG draw sequence would diverge
+    trace = [(r.action_type.value, r.model_id, r.worker_id, r.gpu_id,
+              r.batch_size, r.status.value, r.t_start, r.t_end, r.duration,
+              len(r.request_ids))
+             for r in cl.controller.results_log]
+    return {k: s[k] for k in ("goodput", "timeout", "rejected",
+                              "actions", "total")}, trace
+
+
+@pytest.mark.parametrize("workload", WORKLOADS,
+                         ids=["closed", "open", "pressure"])
+def test_decision_equivalence_seeded(workload):
+    """Optimized and reference schedulers must make identical decisions —
+    the full action/result sequence (types, models, placements, batch
+    sizes, exact start/end times), not merely similar goodput."""
+    opt, opt_trace = _run_workload(ClockworkScheduler, workload)
+    ref, ref_trace = _run_workload(ReferenceClockworkScheduler, workload)
+    assert opt == ref
+    assert opt_trace == ref_trace
+    assert opt["total"] > 0  # the workload actually exercised the system
+
+
+def test_decision_equivalence_under_worker_failure():
+    """Equivalence must survive the failure/requeue path too."""
+    def run(sched_cls):
+        models = _models(4)
+        cl = build_cluster(models, n_workers=2, scheduler=sched_cls(),
+                           preload=["m0", "m1", "m2", "m3"])
+        clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.100,
+                                    concurrency=6) for mid in models]
+        cl.attach_clients(clients)
+        cl.controller.start_heartbeats()
+        cl.loop.schedule(0.8, cl.workers[0].fail)
+        s = cl.run(2.0)
+        return {k: s[k] for k in ("goodput", "timeout", "rejected",
+                                  "actions", "dead_workers")}
+
+    opt = run(ClockworkScheduler)
+    ref = run(ReferenceClockworkScheduler)
+    assert opt == ref
+    assert opt["dead_workers"] == 1
+
+
+# ----------------------------------------------------------- _drop_hopeless
+
+def _scheduler_with_queue(sched_cls, reqs, est=0.003):
+    cl = build_cluster({"m": table1_modeldef("m")}, scheduler=sched_cls())
+    sched = cl.controller.scheduler
+    cl.controller.profiler.seed("INFER", "m", 1, est)
+    for r in reqs:
+        cl.controller.requests[r.id] = r
+        sched.on_request(r)
+    return cl, sched
+
+
+@pytest.mark.parametrize("sched_cls",
+                         [ClockworkScheduler, ReferenceClockworkScheduler],
+                         ids=["optimized", "reference"])
+def test_drop_hopeless_rejects_exactly_the_hopeless_requests(sched_cls):
+    # est=3ms, now=10ms: hopeless iff deadline < 13ms
+    reqs = [
+        Request(model_id="m", arrival=0.000, slo=0.001),   # dl 1ms  hopeless
+        Request(model_id="m", arrival=0.000, slo=0.012),   # dl 12ms hopeless
+        Request(model_id="m", arrival=0.000, slo=0.100),   # dl 100ms ok
+        Request(model_id="m", arrival=0.000, slo=0.0125),  # dl 12.5ms
+                                                           # hopeless mid-q
+        Request(model_id="m", arrival=0.000, slo=0.200),   # dl 200ms ok
+    ]
+    cl, sched = _scheduler_with_queue(sched_cls, reqs)
+    sched._drop_hopeless(0.010)
+    q = sched.queues["m"]
+    assert [r.slo for r in q] == [0.100, 0.200]      # survivors, in order
+    assert cl.controller.stats["rejected"] == 3
+    assert all(r.status == "rejected" for r in reqs if r.slo < 0.013)
+
+
+@pytest.mark.parametrize("sched_cls",
+                         [ClockworkScheduler, ReferenceClockworkScheduler],
+                         ids=["optimized", "reference"])
+def test_drop_hopeless_removes_dead_requests_without_rejecting(sched_cls):
+    alive = Request(model_id="m", arrival=0.0, slo=0.500)
+    dead = Request(model_id="m", arrival=0.0, slo=0.500)
+    cl, sched = _scheduler_with_queue(sched_cls, [dead, alive])
+    dead.status = "ok"   # completed while queued (failure/requeue race)
+    if isinstance(sched, ClockworkScheduler):
+        sched._scan_force.add("m")   # the on_result hint that triggers this
+    sched._drop_hopeless(0.010)
+    assert list(sched.queues["m"]) == [alive]
+    assert cl.controller.stats["rejected"] == 0
+
+
+@pytest.mark.parametrize("sched_cls",
+                         [ClockworkScheduler, ReferenceClockworkScheduler],
+                         ids=["optimized", "reference"])
+def test_infinite_slo_requests_tick_without_error(sched_cls):
+    """Best-effort (slo=inf) requests must not break the tick — regression
+    for the min-deadline bound only being set for finite deadlines."""
+    reqs = [Request(model_id="m", arrival=0.0, slo=float("inf")),
+            Request(model_id="m", arrival=0.0, slo=0.100)]
+    cl, sched = _scheduler_with_queue(sched_cls, reqs)
+    sched.tick()                       # must not raise
+    sched._drop_hopeless(0.010)
+    assert len(sched.queues["m"]) == 2     # neither is hopeless
+    assert cl.controller.stats["rejected"] == 0
+
+
+def test_drop_hopeless_safe_against_synchronous_resubmit():
+    """A client that submits synchronously from on_response must not jump
+    the queue or poison the min-deadline bound."""
+    hopeless = Request(model_id="m", arrival=0.0, slo=0.001)
+    ok1 = Request(model_id="m", arrival=0.0, slo=0.100)
+    ok2 = Request(model_id="m", arrival=0.0, slo=0.200)
+    cl, sched = _scheduler_with_queue(ClockworkScheduler,
+                                      [hopeless, ok1, ok2])
+    resubmitted = Request(model_id="m", arrival=0.0105, slo=0.0125)
+
+    def sync_resubmit(req):
+        if req is hopeless:
+            cl.controller.requests[resubmitted.id] = resubmitted
+            sched.on_request(resubmitted)
+
+    cl.controller.on_response = sync_resubmit
+    sched._drop_hopeless(0.010)
+    q = list(sched.queues["m"])
+    # FIFO kept: survivors first, the mid-scan arrival at the tail
+    assert q == [ok1, ok2, resubmitted]
+    # the bound is the exact queue minimum — covering the new
+    # (earliest-deadline) arrival and not degraded by pre-scan staleness —
+    # so the next pass rejects it once it turns hopeless
+    assert sched._qmin["m"] == resubmitted.deadline
+    sched._drop_hopeless(0.021)        # 0.023 - 0.003 < 0.021 -> hopeless
+    assert resubmitted.status == "rejected"
+    assert list(sched.queues["m"]) == [ok1, ok2]
+
+
+def test_drop_hopeless_single_pass_handles_long_queue_quickly():
+    """The reference restarts its scan per deletion (O(n^2)); the rewrite
+    must stay linear: dropping a 5,000-deep all-hopeless queue is instant."""
+    reqs = [Request(model_id="m", arrival=0.0, slo=0.001)
+            for _ in range(5000)]
+    cl, sched = _scheduler_with_queue(ClockworkScheduler, reqs)
+    t0 = time.perf_counter()
+    sched._drop_hopeless(1.0)
+    elapsed = time.perf_counter() - t0
+    assert not sched.queues["m"]
+    assert cl.controller.stats["rejected"] == 5000
+    assert elapsed < 0.5    # generous; the O(n^2) version takes far longer
+
+
+# ----------------------------------------------------------------- _demands
+
+def test_demands_is_estimate_times_queue_depth():
+    reqs = [Request(model_id="m", arrival=0.0, slo=10.0) for _ in range(7)]
+    cl, sched = _scheduler_with_queue(ClockworkScheduler, reqs, est=0.004)
+    d = sched._demands()
+    assert d == {"m": pytest.approx(7 * 0.004)}
+    # must match the reference's O(n) summation semantics
+    cl2, ref = _scheduler_with_queue(ReferenceClockworkScheduler,
+                                     [Request(model_id="m", arrival=0.0,
+                                              slo=10.0) for _ in range(7)],
+                                     est=0.004)
+    assert ref._demands()["m"] == pytest.approx(d["m"])
+
+
+# ------------------------------------------------------- estimate memoization
+
+def test_estimates_memoized_until_profile_changes():
+    reqs = [Request(model_id="m", arrival=0.0, slo=10.0) for _ in range(4)]
+    cl, sched = _scheduler_with_queue(ClockworkScheduler, reqs)
+    calls = {"n": 0}
+    real = cl.controller.profiler.estimate
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    cl.controller.profiler.estimate = counting
+    sched._est_mem.clear()
+    for _ in range(50):
+        sched._est_or_scale("m", 1)
+        sched._est_or_scale("m", 4)
+    assert calls["n"] == 2          # one profiler hit per (model, batch)
+
+    # a result for the model invalidates its memo
+    class R:
+        model_id = "m"
+        request_ids = ()
+    sched.on_result(R())
+    sched._est_or_scale("m", 1)
+    assert calls["n"] == 3
+
+
+# ------------------------------------------------------------ 2k-model tick
+
+def test_two_thousand_model_tick_stays_fast():
+    models = _models(2000)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(),
+                       preload=[f"m{i}" for i in range(500)],
+                       n_workers=2, gpus_per_worker=4)
+    sched = cl.controller.scheduler
+    for i in range(2000):
+        sched.on_request(Request(model_id=f"m{i}", arrival=0.0, slo=0.100))
+    t0 = time.perf_counter()
+    ticks = 5
+    for _ in range(ticks):
+        sched.tick()
+    mean = (time.perf_counter() - t0) / ticks
+    # generous wall-clock bound: the pre-refactor scheduler takes far more
+    assert mean < 0.25, f"mean 2000-model tick took {mean * 1e3:.1f}ms"
+
+
+# ------------------------------------------------------------- telemetry
+
+def test_tick_latency_and_event_loop_gauges_flow_into_reports():
+    models = _models(4)
+    cl = build_cluster(models, scheduler=ClockworkScheduler())
+    clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.100,
+                                concurrency=2) for mid in models]
+    cl.attach_clients(clients)
+    cl.run(0.5)
+    rep = cl.telemetry_report()
+    g = rep["gauges"][TICK_LATENCY_GAUGE]
+    assert g["n"] > 0 and g["mean"] > 0 and g["p99"] >= g["p50"]
+    assert rep["event_loop"]["events_total"] > 0
+    assert rep["event_loop"]["events_per_wall_s"] > 0
+    # raw samples are exported too
+    samples = list(cl.recorder.iter_gauges(TICK_LATENCY_GAUGE))
+    assert len(samples) == g["n"]
+    assert all(s.value >= 0 for s in samples)
+
+
+def test_gauges_survive_jsonl_export(tmp_path):
+    models = _models(2)
+    cl = build_cluster(models, scheduler=ClockworkScheduler())
+    clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.100)
+               for mid in models]
+    cl.attach_clients(clients)
+    cl.run(0.2)
+    path = tmp_path / "telemetry.jsonl"
+    n = cl.recorder.export_jsonl(str(path))
+    lines = path.read_text().splitlines()
+    assert len(lines) == n
+    import json
+    kinds = {json.loads(l)["kind"] for l in lines}
+    assert "gauge" in kinds
+
+
+# -------------------------------------------------------- residency index
+
+def test_residency_index_matches_mirrors_after_churn():
+    models = _models(12)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(),
+                       device_memory=2e9, n_workers=2)
+    clients = [OpenLoopClient(cl.loop, cl.submit, mid, 0.050, rate=30.0,
+                              stop=1.0, seed=i)
+               for i, mid in enumerate(models)]
+    cl.attach_clients(clients)
+    cl.run(1.0)
+    c = cl.controller
+    expect = {}
+    for wid, m in c.workers.items():
+        for gid in m.gpu_ids():
+            for mid in m.gpus[gid].pagecache.resident:
+                expect.setdefault(mid, set()).add((wid, gid))
+    assert c._residency == expect
+    for mid in expect:
+        where = c.residency_where(mid)
+        assert set(where) == expect[mid]

@@ -154,7 +154,7 @@ def test_recorder_jsonl_export(tmp_path):
     lines = [json.loads(l) for l in path.read_text().splitlines()]
     assert len(lines) == n > 0
     kinds = {l["kind"] for l in lines}
-    assert kinds == {"span", "action"}
+    assert kinds == {"span", "action", "gauge"}
 
 
 def test_recorder_ring_buffer_bounds_memory():
