@@ -5,11 +5,17 @@ The same controller/worker/scheduler code runs under either clock:
     thousands of models, millions of requests, replayed in seconds)
   * RealClock    — wall time; event callbacks execute JAX programs
     (quickstart / engine demos on the local device)
+
+`RealtimePump` drives an EventLoop on a real clock while accepting
+callbacks posted from other threads — the bridge the distributed runtime
+(`repro.runtime`) needs so TCP reader threads can hand frames to the
+single-threaded controller/worker event loop.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import queue
 import time
 from typing import Callable, Optional
 
@@ -104,3 +110,72 @@ class EventLoop:
                 "wall_busy_s": w,
                 "events_per_wall_s": (self.events_total / w) if w > 0
                 else 0.0}
+
+
+class RealtimePump:
+    """Single-threaded driver for an EventLoop under wall time that also
+    accepts cross-thread work.
+
+    The EventLoop itself is not thread-safe; transport reader threads must
+    never touch it directly. Instead they `post(fn)` and the pump runs `fn`
+    on the loop thread between event dispatches. The pump sleeps no longer
+    than `max_poll` (so `stop()` is honored promptly) or until the next
+    scheduled event, whichever is sooner.
+    """
+
+    def __init__(self, loop: EventLoop, max_poll: float = 0.02):
+        self.loop = loop
+        self.max_poll = max_poll
+        self._inbox: "queue.Queue[Callable[[], None]]" = queue.Queue()
+        self._stop = False
+
+    def post(self, fn: Callable[[], None]) -> None:
+        """Thread-safe: run `fn` on the pump thread as soon as possible."""
+        self._inbox.put(fn)
+
+    def stop(self) -> None:
+        self._stop = True
+        self._inbox.put(lambda: None)     # wake a sleeping pump
+
+    def pump_once(self) -> None:
+        """One iteration: run due events, then wait briefly for posted work
+        (at most until the next scheduled event or `max_poll`)."""
+        loop = self.loop
+        nxt = loop.peek_time()
+        now = loop.now()
+        if nxt is not None and nxt <= now:
+            loop.run_until(now)
+            self._drain_inbox()
+            return
+        timeout = self.max_poll if nxt is None \
+            else min(self.max_poll, max(0.0, nxt - now))
+        try:
+            fn = self._inbox.get(timeout=timeout)
+        except queue.Empty:
+            return
+        fn()
+        self._drain_inbox()
+
+    def _drain_inbox(self) -> None:
+        while True:
+            try:
+                fn = self._inbox.get_nowait()
+            except queue.Empty:
+                return
+            fn()
+
+    def run(self, until: Optional[Callable[[], bool]] = None,
+            timeout: Optional[float] = None) -> bool:
+        """Pump until `until()` is true, `timeout` seconds elapse, or
+        `stop()` is called. Returns whether `until` was satisfied."""
+        t_end = None if timeout is None else self.loop.now() + timeout
+        while not self._stop:
+            if until is not None and until():
+                return True
+            if t_end is not None and self.loop.now() >= t_end:
+                return until() if until is not None else False
+            self.pump_once()
+        return until() if until is not None else False
+
+    def run_for(self, seconds: float) -> None:
+        self.run(timeout=seconds)

@@ -19,6 +19,8 @@ models elsewhere. Workers can be added/removed at runtime (elasticity).
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 from typing import Callable, Dict, List, Optional
 
 from repro.core.actions import (EXEC_TYPES, Action, ActionType, Request,
@@ -55,6 +57,11 @@ class WorkerMirror:
         ]
         self.outstanding: Dict[int, Action] = {}
         self.missed_results = 0
+        # estimated one-way network delay to this worker (seconds). 0 for
+        # in-process workers; for remote workers the runtime keeps it fresh
+        # from heartbeat RTTs (§5 network-delay treatment) and the scheduler's
+        # action windows widen by it in send_action.
+        self.net_delay = 0.0
 
     def gpu_ids(self):
         return range(len(self.gpus))
@@ -94,6 +101,12 @@ class Controller:
         self.on_response: Optional[Callable[[Request], None]] = None
         self.tick_interval = 0.001
         self._ticker_on = False
+        # missed-result timer wheel: one armed sweep over a deadline heap
+        # instead of one scheduled closure per action (heartbeat timeouts
+        # ride the same mechanism via _arm_watch)
+        self._watch_heap: List[tuple] = []    # (t, seq, kind, payload)
+        self._watch_next = float("inf")       # earliest armed sweep time
+        self._watch_seq = itertools.count()
 
         # telemetry
         self.recorder = recorder if recorder is not None else Recorder()
@@ -205,10 +218,71 @@ class Controller:
                     if not ok["v"]:
                         self.worker_failed(wid)
 
-                self.loop.schedule_in(self.heartbeat_timeout, check)
+                self.watch_at(self.loop.now() + self.heartbeat_timeout,
+                              check)
             self.loop.schedule_in(self.heartbeat_interval, beat)
 
         self.loop.schedule_in(self.heartbeat_interval, beat)
+
+    def observe_net_delay(self, worker_id: str, rtt: float,
+                          alpha: float = 0.2):
+        """Fold a measured heartbeat round-trip into the worker's one-way
+        network-delay estimate (EWMA). The runtime's ControllerServer calls
+        this on every PONG; send_action widens expected starts and
+        missed-result deadlines by the estimate."""
+        m = self.workers.get(worker_id)
+        if m is None or rtt < 0:
+            return
+        sample = rtt / 2.0
+        if m.net_delay == 0.0:
+            m.net_delay = sample
+        else:
+            m.net_delay = (1.0 - alpha) * m.net_delay + alpha * sample
+
+    # ------------------------------------------------------- timer wheel
+    # One armed `loop.schedule` sweeps a deadline heap, replacing the
+    # per-action closure the missed-result detector used to schedule (and
+    # the per-beat heartbeat-timeout closures, which share the wheel via
+    # `watch_at`). Entries are (t, seq, kind, payload); seq keeps payloads
+    # out of tuple comparison.
+    _WATCH_ACTION, _WATCH_FN = 0, 1
+
+    def _arm_watch(self, t: float):
+        if t < self._watch_next:
+            self._watch_next = t
+            self.loop.schedule(t, self._watch_sweep)
+
+    def watch_at(self, t: float, fn: Callable[[], None]):
+        """Run `fn` once at time `t` via the shared timer-wheel sweep."""
+        heapq.heappush(self._watch_heap,
+                       (t, next(self._watch_seq), self._WATCH_FN, fn))
+        self._arm_watch(t)
+
+    def _watch_action_at(self, t: float, action_id: int, worker_id: str):
+        heapq.heappush(self._watch_heap,
+                       (t, next(self._watch_seq), self._WATCH_ACTION,
+                        (action_id, worker_id)))
+        self._arm_watch(t)
+
+    def _watch_sweep(self):
+        now = self.loop.now()
+        if now + 1e-12 < self._watch_next:
+            return  # superseded wakeup; an earlier re-arm already swept
+        self._watch_next = float("inf")
+        heap = self._watch_heap
+        while heap and heap[0][0] <= now + 1e-12:
+            _, _, kind, payload = heapq.heappop(heap)
+            if kind == self._WATCH_ACTION:
+                aid, wid = payload
+                mm = self.workers.get(wid)
+                if mm is not None and aid in mm.outstanding:
+                    mm.missed_results += 1
+                    if mm.missed_results >= self.missed_result_threshold:
+                        self.worker_failed(wid)
+            else:
+                payload()
+        if heap:
+            self._arm_watch(heap[0][0])
 
     # ------------------------------------------------------------ requests
     def _has_pending(self) -> bool:
@@ -272,13 +346,17 @@ class Controller:
         now = self.loop.now()
         action.issued_at = now
         g = m.gpus[action.gpu_id]
+        # one-way send estimate: controller-side dispatch overhead plus the
+        # worker's estimated network delay (0 for in-process workers) — the
+        # paper's §5 treatment of network delay in action windows
+        send_est = self.action_delay + m.net_delay
         # pending-actions model: an executor starts this action no earlier
         # than when its already-submitted work completes
         if action.type == ActionType.LOAD:
-            start = max(now + self.action_delay, action.earliest,
+            start = max(now + send_est, action.earliest,
                         g.load_free_at)
         else:
-            start = max(now + self.action_delay, action.earliest,
+            start = max(now + send_est, action.earliest,
                         g.exec_free_at)
         action.expected_completion = start + action.expected_duration
         # optimistic mirror updates (reconciled on result)
@@ -300,23 +378,19 @@ class Controller:
                                         action.batch_size)
         m.outstanding[action.id] = action
         self.stats["actions"] += 1
+        # the schedule_in below models only the controller-side dispatch;
+        # for remote workers the transport itself adds the network leg
         self.loop.schedule_in(self.action_delay,
                               lambda: m.worker.receive(action))
-        # missing-result failure detection
+        # missing-result failure detection via the shared timer wheel
+        # (deadline covers both network legs: send_est out, net_delay back)
         if action.type != ActionType.UNLOAD:
             deadline = action.expected_completion + self.result_grace \
-                + 2 * self.action_delay
-
-            def check(aid=action.id, wid=action.worker_id):
-                mm = self.workers.get(wid)
-                if mm is not None and aid in mm.outstanding:
-                    mm.missed_results += 1
-                    if mm.missed_results >= self.missed_result_threshold:
-                        self.worker_failed(wid)
-
-            self.loop.schedule(max(deadline, action.latest
-                                   + action.expected_duration
-                                   + self.result_grace), check)
+                + self.action_delay + send_est
+            self._watch_action_at(max(deadline, action.latest
+                                      + action.expected_duration
+                                      + self.result_grace),
+                                  action.id, action.worker_id)
 
     def on_result(self, result: Result):
         self.results_log.append(result)

@@ -222,6 +222,16 @@ class Worker:
                    t_received=action.received_at)
         self.loop.schedule_in(self.result_delay, lambda: self.on_result(r))
 
+    # -------------------------------------------------- runtime descriptor
+    def spec(self) -> dict:
+        """Wire-serializable descriptor of this worker (memory geometry) —
+        the payload a WorkerDaemon sends in its HELLO so the controller can
+        build an exact PageCache mirror without sharing the process."""
+        return {"worker_id": self.worker_id,
+                "gpus": [{"total_pages": pc.total_pages,
+                          "page_bytes": pc.page_bytes}
+                         for pc in self.pagecaches]}
+
     # -------------------------------------------------- telemetry
     def utilization(self, horizon: float) -> Dict[str, float]:
         out = {}

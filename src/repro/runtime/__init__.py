@@ -1,0 +1,20 @@
+"""Distributed serving runtime (DESIGN.md §5).
+
+Lifts the in-process Controller/Worker pair across a process boundary:
+
+* `protocol`  — versioned, length-prefixed JSON wire protocol for
+  Request/Action/Result/telemetry traffic plus membership messages.
+* `transport` — pluggable Channel abstraction with a deterministic
+  in-process loopback (injectable latency/jitter/drop, virtual-clock
+  compatible) and a real TCP implementation for multi-process runs.
+* `controller` — ControllerServer: worker membership (join/leave,
+  heartbeats feeding the missed-result detector) and per-worker network
+  latency estimation folded into the scheduler's action windows.
+* `worker` — WorkerHost/WorkerDaemon (`python -m repro.runtime.worker`):
+  registers with the controller, executes actions via the existing core
+  Worker + backends, and streams results + telemetry back.
+* `harness` — builds loopback "distributed" clusters that plug into the
+  existing simulator Cluster API, and demo model sets shared by both
+  sides of the TCP demo.
+"""
+from repro.runtime.protocol import PROTOCOL_VERSION  # noqa: F401

@@ -1,0 +1,216 @@
+"""Controller-side distributed runtime: membership + remote worker stubs.
+
+`ControllerServer` adopts transport channels (loopback or TCP) and speaks
+the protocol's membership handshake. A registering worker daemon becomes a
+`RemoteWorkerStub` — an object that looks exactly like a core `Worker` to
+the unmodified `Controller` (worker_id, pagecache geometry, `receive`,
+`ping`, `on_result`), so the controller's mirrors, scheduler, heartbeats,
+and missed-result detector all work unchanged across the process boundary.
+
+Per-worker network latency: every heartbeat PONG carries the PING's send
+stamp back, the server computes the RTT and folds RTT/2 into the worker
+mirror's `net_delay` (EWMA, `Controller.observe_net_delay`), which widens
+the scheduler's expected-start and missed-result windows for that worker —
+the paper's §5 treatment of network delay. The loopback harness disables
+estimation (`estimate_net_delay=False`) and folds its *configured* latency
+instead, keeping virtual-clock runs deterministic.
+
+Channels whose first message is SUBMIT instead of HELLO are request
+clients: decoded Requests enter `Controller.on_request` and their
+completions return as RESPONSE frames.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional
+
+from repro.core.actions import Request
+from repro.core.controller import Controller
+from repro.runtime import protocol
+from repro.runtime.transport import Channel, TcpServer
+
+
+class _PageSpec:
+    """Minimal pagecache geometry stand-in (what WorkerMirror reads)."""
+
+    __slots__ = ("total_pages", "page_bytes")
+
+    def __init__(self, total_pages: int, page_bytes: int):
+        self.total_pages = total_pages
+        self.page_bytes = page_bytes
+
+
+class RemoteWorkerStub:
+    """Controller-side proxy for a worker daemon reachable over a Channel.
+
+    Duck-types the parts of `core.worker.Worker` the Controller touches.
+    """
+
+    def __init__(self, channel: Channel, worker_id: str,
+                 gpu_specs: List[dict], server: "ControllerServer"):
+        self.channel = channel
+        self.worker_id = worker_id
+        self.pagecaches = [_PageSpec(g["total_pages"], g["page_bytes"])
+                           for g in gpu_specs]
+        self.server = server
+        self.alive = True
+        self.graceful = False           # set before an expected disconnect
+        self.on_result: Optional[Callable] = None   # set by add_worker
+        self._ping_seq = itertools.count()
+        self._pings: Dict[int, tuple] = {}   # seq -> (reply, t_sent)
+
+    # ------------------------------------------------- Worker-facing API
+    def receive(self, action) -> None:
+        if self.alive:
+            self.channel.send(protocol.action_msg(action))
+
+    def ping(self, reply: Callable[[], None]) -> None:
+        if not self.alive:
+            return
+        seq = next(self._ping_seq)
+        t = self.server.controller.loop.now()
+        self._pings[seq] = (reply, t)
+        self.channel.send(protocol.ping(seq, t))
+
+    # ---------------------------------------------------- frame handling
+    def handle(self, msg: dict) -> None:
+        kind = msg.get("kind")
+        c = self.server.controller
+        if kind == "result":
+            r = protocol.result_from_wire(msg["result"])
+            if self.on_result is not None:
+                self.on_result(r)
+        elif kind == "pong":
+            entry = self._pings.pop(msg["seq"], None)
+            if entry is None:
+                return
+            reply, t_sent = entry
+            if self.server.estimate_net_delay:
+                rtt = c.loop.now() - t_sent
+                # subtract the worker's own reply turnaround? the stamp we
+                # echo is the send time, so rtt includes the worker's
+                # result_delay — the same asymmetry the in-process path has
+                c.observe_net_delay(self.worker_id, rtt)
+            reply()
+        elif kind == "telemetry":
+            rec = c.recorder
+            for wire in msg.get("gauges", ()):
+                g = protocol.gauge_from_wire(wire)
+                rec.record_gauge(g.name, g.t, g.value)
+        elif kind == "sync":
+            self.channel.send(protocol.sync_ack(msg["t0"], c.loop.now()))
+        elif kind == "goodbye":
+            self.graceful = True
+            self.alive = False
+            self.channel.send(protocol.goodbye_ack())
+            c.remove_worker(self.worker_id)
+        # unknown kinds are ignored (forward compatibility within v1)
+
+    def handle_close(self) -> None:
+        was_alive = self.alive
+        self.alive = False
+        if was_alive and not self.graceful:
+            self.server.controller.worker_failed(self.worker_id)
+
+
+class ControllerServer:
+    """Adopts channels, runs the membership handshake, and owns the
+    controller-side ends of all worker/client connections."""
+
+    def __init__(self, controller: Controller, *,
+                 estimate_net_delay: bool = True):
+        self.controller = controller
+        self.estimate_net_delay = estimate_net_delay
+        self.stubs: Dict[str, RemoteWorkerStub] = {}
+        self.clients: List[Channel] = []
+        # local request id -> (origin channel, the client's own id)
+        self._req_origin: Dict[int, tuple] = {}
+        self._tcp: Optional[TcpServer] = None
+        self.closed = False
+
+        prev = controller.on_response
+
+        def fan(req):
+            if prev:
+                prev(req)
+            origin = self._req_origin.pop(req.id, None)
+            if origin is not None:
+                ch, remote_id = origin
+                ch.send(protocol.response_msg(req, override_id=remote_id))
+
+        controller.on_response = fan
+
+    # ------------------------------------------------------- channel intake
+    def adopt(self, channel: Channel) -> None:
+        """Take ownership of a fresh channel; the first frame decides
+        whether it is a worker (HELLO) or a request client (SUBMIT)."""
+        channel.on_message = lambda msg: self._first_frame(channel, msg)
+        channel.on_close = lambda: None
+
+    def _first_frame(self, channel: Channel, msg: dict) -> None:
+        protocol.check_version(msg)
+        kind = msg.get("kind")
+        if kind == "hello":
+            self._register_worker(channel, msg)
+        elif kind == "submit":
+            self.clients.append(channel)
+            channel.on_message = lambda m: self._client_frame(channel, m)
+            self._client_frame(channel, msg)
+        else:
+            channel.close()
+
+    def _register_worker(self, channel: Channel, msg: dict) -> None:
+        wid = msg["worker_id"]
+        if wid in self.controller.workers:
+            # a stale registration (daemon restart): retire the old mirror
+            # gracefully — outstanding work is requeued, but a planned
+            # replacement must not count as a dead worker
+            old = self.stubs.get(wid)
+            if old is not None:
+                old.graceful = True
+                old.alive = False
+                old.channel.close()
+            self.controller.remove_worker(wid)
+        stub = RemoteWorkerStub(channel, wid, msg["gpus"], self)
+        self.stubs[wid] = stub
+        channel.on_message = stub.handle
+        channel.on_close = stub.handle_close
+        self.controller.add_worker(stub, protocol.profiles_from_hello(msg))
+        channel.send(protocol.welcome(
+            wid, self.controller.heartbeat_interval))
+
+    def _client_frame(self, channel: Channel, msg: dict) -> None:
+        if msg.get("kind") == "submit":
+            wire = protocol.request_from_wire(msg["request"])
+            # re-issue the id: client-process id counters collide with each
+            # other and with controller-local requests. The remote arrival
+            # stamp is likewise meaningless on this clock — admission time
+            # is the arrival. The RESPONSE echoes the client's own id back.
+            req = Request(model_id=wire.model_id,
+                          arrival=self.controller.loop.now(),
+                          slo=wire.slo, batchable=wire.batchable)
+            self._req_origin[req.id] = (channel, wire.id)
+            self.controller.on_request(req)
+
+    # -------------------------------------------------------------- TCP
+    def listen_tcp(self, host: str, port: int,
+                   post: Callable[[Callable[[], None]], None]) -> int:
+        """Start accepting worker/client connections; returns bound port."""
+        self._tcp = TcpServer(host, port, post, self.adopt)
+        return self._tcp.port
+
+    # --------------------------------------------------------- lifecycle
+    def shutdown(self) -> None:
+        """Graceful stop: tell every live daemon to wind down (they flush
+        telemetry and exit), then stop accepting."""
+        if self.closed:
+            return
+        self.closed = True
+        for stub in self.stubs.values():
+            if stub.alive:
+                stub.graceful = True
+                stub.channel.send(protocol.goodbye("controller shutdown"))
+        if self._tcp is not None:
+            # keep live channels open: daemons flush telemetry, ack, and
+            # hang up themselves; we only stop accepting new ones
+            self._tcp.close(close_channels=False)

@@ -55,6 +55,38 @@ def seed_profiles(models: Dict[str, ModelDef],
     return out
 
 
+def make_sim_worker(i: int, loop: EventLoop, models: Dict[str, ModelDef], *,
+                    gpus_per_worker: int, device_memory: float,
+                    host_to_dev_bw: float, noise: float, spike_prob: float,
+                    spike_scale: float, seed: int) -> Worker:
+    """One simulated worker, identically constructed whether it lives
+    in-process or behind the distributed runtime's loopback transport
+    (the decision-equivalence tests depend on both builders agreeing)."""
+    backend = SimBackend(host_to_dev_bw=host_to_dev_bw, noise=noise,
+                         spike_prob=spike_prob, spike_scale=spike_scale,
+                         seed=seed + i)
+    return Worker(f"w{i}", loop, backend, models, n_gpus=gpus_per_worker,
+                  device_memory_bytes=device_memory)
+
+
+def place_preload(controller, workers: List[Worker],
+                  models: Dict[str, ModelDef],
+                  preload: Optional[List[str]]) -> None:
+    """Round-robin warm placement before time starts: weights land in the
+    worker pagecaches AND the controller mirrors (which must already be
+    registered)."""
+    if not preload:
+        return
+    gpu_list = [(w, g) for w in workers for g in range(w.n_gpus)]
+    for j, mid in enumerate(preload):
+        w, g = gpu_list[j % len(gpu_list)]
+        md = models[mid]
+        pages = md.pages(w.pagecaches[g].page_bytes)
+        if w.pagecaches[g].alloc(mid, pages):
+            mirr = controller.workers[w.worker_id].gpus[g]
+            mirr.pagecache.alloc(mid, pages)
+
+
 @dataclasses.dataclass
 class Cluster:
     loop: EventLoop
@@ -62,9 +94,18 @@ class Cluster:
     workers: List[Worker]
     models: Dict[str, ModelDef]
     clients: list = dataclasses.field(default_factory=list)
+    # set when the cluster runs over the distributed runtime (loopback
+    # transport): holds the ControllerServer/WorkerHosts/links and a
+    # graceful shutdown() that flushes daemon telemetry
+    runtime: Optional[object] = None
 
     def submit(self, req: Request):
         self.controller.on_request(req)
+
+    def shutdown(self):
+        """Gracefully wind down distributed plumbing (no-op in-process)."""
+        if self.runtime is not None:
+            self.runtime.shutdown()
 
     def attach_clients(self, clients):
         self.clients.extend(clients)
@@ -116,7 +157,24 @@ def build_cluster(models: Dict[str, ModelDef], *, n_workers: int = 1,
                   action_delay: float = 0.0005, seed: int = 0,
                   preload: Optional[List[str]] = None,
                   profile_store: Optional[ProfileStore] = None,
-                  recorder: Optional[Recorder] = None) -> Cluster:
+                  recorder: Optional[Recorder] = None,
+                  transport: Optional[str] = None,
+                  **transport_kw) -> Cluster:
+    if transport is not None:
+        # route controller<->worker traffic through the distributed
+        # runtime's wire protocol instead of direct calls (DESIGN.md §5);
+        # transport_kw: latency/jitter/drop/transport_seed/...
+        if transport != "loopback":
+            raise ValueError(f"unknown transport {transport!r}; "
+                             "multi-process runs use repro.runtime directly")
+        from repro.runtime.harness import build_loopback_cluster
+        return build_loopback_cluster(
+            models, n_workers=n_workers, gpus_per_worker=gpus_per_worker,
+            scheduler=scheduler, device_memory=device_memory,
+            host_to_dev_bw=host_to_dev_bw, noise=noise,
+            spike_prob=spike_prob, spike_scale=spike_scale,
+            action_delay=action_delay, seed=seed, preload=preload,
+            profile_store=profile_store, recorder=recorder, **transport_kw)
     loop = EventLoop(VirtualClock())
     sched = scheduler if scheduler is not None else ClockworkScheduler()
     workers = []
@@ -126,23 +184,15 @@ def build_cluster(models: Dict[str, ModelDef], *, n_workers: int = 1,
     profiles = profile_store.seed_dict() if profile_store is not None \
         else seed_profiles(models, host_to_dev_bw)
     for i in range(n_workers):
-        backend = SimBackend(host_to_dev_bw=host_to_dev_bw, noise=noise,
-                             spike_prob=spike_prob, spike_scale=spike_scale,
-                             seed=seed + i)
-        w = Worker(f"w{i}", loop, backend, models, n_gpus=gpus_per_worker,
-                   device_memory_bytes=device_memory)
+        w = make_sim_worker(i, loop, models,
+                            gpus_per_worker=gpus_per_worker,
+                            device_memory=device_memory,
+                            host_to_dev_bw=host_to_dev_bw, noise=noise,
+                            spike_prob=spike_prob,
+                            spike_scale=spike_scale, seed=seed)
         workers.append(w)
         controller.add_worker(w, profiles if i == 0 else None)
-    if preload:
-        # place models round-robin before time starts (warm start)
-        gpu_list = [(w, g) for w in workers for g in range(w.n_gpus)]
-        for j, mid in enumerate(preload):
-            w, g = gpu_list[j % len(gpu_list)]
-            md = models[mid]
-            pages = md.pages(w.pagecaches[g].page_bytes)
-            if w.pagecaches[g].alloc(mid, pages):
-                mirr = controller.workers[w.worker_id].gpus[g]
-                mirr.pagecache.alloc(mid, pages)
+    place_preload(controller, workers, models, preload)
     return Cluster(loop=loop, controller=controller, workers=workers,
                    models=models)
 

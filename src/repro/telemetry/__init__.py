@@ -12,13 +12,13 @@ from repro.telemetry.profile_store import (LatencyProfile, ProfileStore,
 from repro.telemetry.recorder import Recorder
 from repro.telemetry.reports import (gauge_report, latency_breakdown,
                                      latency_quantiles, latency_summary,
-                                     prediction_error_report,
+                                     load_jsonl, prediction_error_report,
                                      profile_table, summarize_run)
 
 __all__ = [
     "ActionRecord", "GaugeSample", "RequestSpan", "Recorder",
     "LatencyProfile", "ProfileStore", "STORE_VERSION",
     "gauge_report", "latency_breakdown", "latency_quantiles",
-    "latency_summary", "prediction_error_report", "profile_table",
-    "summarize_run",
+    "latency_summary", "load_jsonl", "prediction_error_report",
+    "profile_table", "summarize_run",
 ]

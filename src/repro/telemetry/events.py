@@ -72,6 +72,18 @@ class RequestSpan:
         return {k: (None if isinstance(v, float) and math.isnan(v) else v)
                 for k, v in dataclasses.asdict(self).items()}
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "RequestSpan":
+        """Inverse of to_dict (wire decode / JSONL reload): null phase
+        stamps come back as NaN."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        for k in ("queued", "dispatched", "load_start", "load_end",
+                  "exec_start", "exec_end", "response"):
+            if kw.get(k) is None:
+                kw[k] = NAN
+        return cls(**kw)
+
 
 @dataclasses.dataclass
 class ActionRecord:
@@ -104,6 +116,13 @@ class ActionRecord:
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "ActionRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw["request_ids"] = tuple(kw.get("request_ids", ()))
+        return cls(**kw)
+
 
 @dataclasses.dataclass
 class GaugeSample:
@@ -114,3 +133,7 @@ class GaugeSample:
 
     def to_dict(self) -> dict:
         return {"name": self.name, "t": self.t, "value": self.value}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "GaugeSample":
+        return cls(name=d["name"], t=d["t"], value=d["value"])

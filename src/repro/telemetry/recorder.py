@@ -21,6 +21,7 @@ from __future__ import annotations
 import collections
 import json
 import math
+import os
 from typing import Dict, Iterable, Optional
 
 from repro.telemetry.events import ActionRecord, GaugeSample, RequestSpan
@@ -39,6 +40,15 @@ class Recorder:
         self.dropped_actions = 0
         self.dropped_spans = 0
         self.dropped_gauges = 0
+        # continuous JSONL streaming (stream_to): long-running daemons
+        # write records as they close instead of one end-of-run export
+        self._stream_f = None
+        self._stream_path: Optional[str] = None
+        self._stream_bytes = 0
+        self._rotate_bytes: Optional[int] = None
+        self._rotate_keep = 4
+        self.stream_lines = 0
+        self.stream_rotations = 0
 
     # ------------------------------------------------------------- spans
     def span_open(self, req, queued: float):
@@ -97,6 +107,8 @@ class Recorder:
         if len(self.spans) == self.capacity:
             self.dropped_spans += 1
         self.spans.append(s)
+        if self._stream_f is not None:
+            self._stream_write("span", s.to_dict())
         return s
 
     # ----------------------------------------------------------- actions
@@ -116,6 +128,8 @@ class Recorder:
             actual=result.duration, predicted=predicted,
             request_ids=tuple(result.request_ids))
         self.actions.append(rec)
+        if self._stream_f is not None:
+            self._stream_write("action", rec.to_dict())
         return rec
 
     # ------------------------------------------------------------ gauges
@@ -127,12 +141,64 @@ class Recorder:
             dq = self.gauges[name] = collections.deque(maxlen=self.capacity)
         if len(dq) == self.capacity:
             self.dropped_gauges += 1
-        dq.append(GaugeSample(name=name, t=t, value=value))
+        g = GaugeSample(name=name, t=t, value=value)
+        dq.append(g)
+        if self._stream_f is not None:
+            self._stream_write("gauge", g.to_dict())
 
     def iter_gauges(self, name: Optional[str] = None):
         if name is not None:
             return iter(self.gauges.get(name, ()))
         return (g for dq in self.gauges.values() for g in dq)
+
+    # --------------------------------------------------------- streaming
+    def stream_to(self, path: str, rotate_bytes: Optional[int] = None,
+                  rotate_keep: int = 4) -> None:
+        """Continuously append every closed span / action record / gauge
+        sample to `path` as JSONL. When `rotate_bytes` is set and the live
+        file exceeds it, the file rotates (`path` -> `path.1` -> ... ->
+        `path.<rotate_keep>`, oldest dropped) — so a long-running daemon's
+        telemetry never grows one file without bound."""
+        self.close_stream()
+        self._stream_path = path
+        self._rotate_bytes = rotate_bytes
+        self._rotate_keep = max(1, rotate_keep)
+        # binary mode: the rotation bound counts encoded bytes, and tell()
+        # on an append stream is the true file size
+        self._stream_f = open(path, "ab")
+        self._stream_bytes = self._stream_f.tell()
+
+    def _stream_write(self, kind: str, d: dict) -> None:
+        # allow_nan: best-effort spans carry slo=inf (Python JSON extension)
+        data = (json.dumps({"kind": kind, **d}, separators=(",", ":"),
+                           allow_nan=True) + "\n").encode("utf-8")
+        self._stream_f.write(data)
+        self._stream_bytes += len(data)
+        self.stream_lines += 1
+        if self._rotate_bytes is not None \
+                and self._stream_bytes >= self._rotate_bytes:
+            self._rotate()
+
+    def _rotate(self) -> None:
+        self._stream_f.close()
+        path = self._stream_path
+        oldest = f"{path}.{self._rotate_keep}"
+        if os.path.exists(oldest):
+            os.remove(oldest)
+        for k in range(self._rotate_keep - 1, 0, -1):
+            src = f"{path}.{k}"
+            if os.path.exists(src):
+                os.replace(src, f"{path}.{k + 1}")
+        os.replace(path, f"{path}.1")
+        self._stream_f = open(path, "wb")
+        self._stream_bytes = 0
+        self.stream_rotations += 1
+
+    def close_stream(self) -> None:
+        """Flush and stop streaming (daemon shutdown path)."""
+        if self._stream_f is not None:
+            self._stream_f.close()
+            self._stream_f = None
 
     # ------------------------------------------------------------ export
     def iter_actions(self) -> Iterable[ActionRecord]:

@@ -9,6 +9,7 @@ These are the *single* aggregation path for the repo's figures:
 """
 from __future__ import annotations
 
+import json
 import math
 from typing import Dict, Iterable, List, Sequence, Tuple
 
@@ -101,6 +102,28 @@ def summarize_run(recorder) -> dict:
             "prediction_error": prediction_error_report(
                 recorder.iter_actions()),
             "gauges": gauge_report(recorder)}
+
+
+# ------------------------------------------------------------------ jsonl
+def load_jsonl(path: str) -> dict:
+    """Reload a Recorder JSONL file (end-of-run `export_jsonl` or a
+    `stream_to` file/rotation) into typed records, so offline analysis of
+    a daemon's telemetry stream can reuse `latency_breakdown` /
+    `prediction_error_report` unchanged."""
+    from repro.telemetry.events import (ActionRecord, GaugeSample,
+                                        RequestSpan)
+    out = {"spans": [], "actions": [], "gauges": []}
+    with open(path) as f:
+        for line in f:
+            d = json.loads(line)
+            kind = d.pop("kind", None)
+            if kind == "span":
+                out["spans"].append(RequestSpan.from_dict(d))
+            elif kind == "action":
+                out["actions"].append(ActionRecord.from_dict(d))
+            elif kind == "gauge":
+                out["gauges"].append(GaugeSample.from_dict(d))
+    return out
 
 
 # ------------------------------------------------------------------ store

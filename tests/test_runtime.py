@@ -1,0 +1,369 @@
+"""Distributed runtime tests: wire protocol round-trips, loopback
+decision-trace equivalence with the in-process path, membership
+(join/leave/failure), network-delay folding, and the daemon-shutdown
+telemetry-flush regression."""
+import math
+
+import pytest
+
+from repro.core.actions import Action, ActionType, Request, Result, \
+    ResultStatus
+from repro.core.scheduler import ClockworkScheduler
+from repro.runtime import protocol
+from repro.runtime.transport import LoopbackLink
+from repro.runtime.worker import ClockSync
+from repro.serving.simulator import build_cluster, table1_modeldef
+from repro.serving.workload import ClosedLoopClient, OpenLoopClient
+
+
+def _models(n):
+    return {f"m{i}": table1_modeldef(f"m{i}") for i in range(n)}
+
+
+# ----------------------------------------------------------------- protocol
+
+def test_action_round_trip_is_exact():
+    a = Action(type=ActionType.INFER, model_id="m0", worker_id="w0",
+               gpu_id=1, earliest=1.23456789012345, latest=2.5,
+               expected_duration=0.0031, batch_size=4,
+               request_ids=(7, 8, 9))
+    b = protocol.action_from_wire(protocol.action_to_wire(a))
+    assert b == a                      # dataclass equality, floats exact
+
+
+def test_result_round_trip_through_frames():
+    r = Result(action_id=41, action_type=ActionType.LOAD, model_id="m1",
+               worker_id="w2", gpu_id=0, status=ResultStatus.SUCCESS,
+               t_start=0.125, t_end=0.25, duration=0.125, batch_size=1,
+               request_ids=(), t_received=0.1)
+    frames = list(protocol.iter_frames(
+        protocol.encode_frame(protocol.result_msg(r))))
+    assert len(frames) == 1
+    assert protocol.result_from_wire(frames[0]["result"]) == r
+
+
+def test_request_round_trip_preserves_infinite_slo():
+    r = Request(model_id="m0", arrival=1.0, slo=float("inf"))
+    d = list(protocol.iter_frames(
+        protocol.encode_frame(protocol.submit_msg(r))))[0]
+    r2 = protocol.request_from_wire(d["request"])
+    assert r2.id == r.id and math.isinf(r2.slo)
+
+
+def test_frame_decoder_handles_arbitrary_chunking():
+    msgs = [protocol.ping(i, float(i)) for i in range(5)]
+    blob = b"".join(protocol.encode_frame(m) for m in msgs)
+    dec = protocol.FrameDecoder()
+    out = []
+    for i in range(0, len(blob), 3):   # 3-byte dribble
+        out.extend(dec.feed(blob[i:i + 3]))
+    assert [m["seq"] for m in out] == [0, 1, 2, 3, 4]
+
+
+def test_version_mismatch_rejected():
+    with pytest.raises(protocol.ProtocolError):
+        protocol.check_version({"v": 999, "kind": "hello"})
+
+
+def test_hello_profiles_round_trip():
+    profiles = {("INFER", "m0", 1): 0.003, ("LOAD", "m0", 1): 0.009}
+    msg = list(protocol.iter_frames(protocol.encode_frame(
+        protocol.hello("w0", [{"total_pages": 10, "page_bytes": 1}],
+                       profiles))))[0]
+    assert protocol.profiles_from_hello(msg) == profiles
+
+
+# --------------------------------------------------------------- clock sync
+
+def test_clock_sync_identity_and_offset_recovery():
+    s = ClockSync()
+    assert s.to_local(5.0) == 5.0 and s.to_remote(5.0) == 5.0
+    # remote clock = local + 100 (symmetric 10ms legs)
+    s.observe(t0_local=1.0, t_remote=101.010, t1_local=1.020)
+    assert s.offset == pytest.approx(100.0, abs=1e-9)
+    # a higher-RTT sample must not displace the min-RTT estimate
+    s.observe(t0_local=2.0, t_remote=102.5, t1_local=2.5)
+    assert s.offset == pytest.approx(100.0, abs=1e-9)
+
+
+# ------------------------------------------------- decision equivalence
+
+EQ_WORKLOADS = ["closed", "open"]
+
+
+def _run_seeded(kind, *, transport):
+    models = _models(6)
+    kw = dict(transport="loopback") if transport else {}
+    cl = build_cluster(models, scheduler=ClockworkScheduler(), seed=4, **kw)
+    clients = []
+    for i, mid in enumerate(models):
+        if kind == "open":
+            clients.append(OpenLoopClient(cl.loop, cl.submit, mid, 0.100,
+                                          rate=40.0, stop=1.2, seed=10 + i))
+        else:
+            clients.append(ClosedLoopClient(cl.loop, cl.submit, mid, 0.030,
+                                            concurrency=4))
+    cl.attach_clients(clients)
+    cl.controller.start_heartbeats()
+    s = cl.run(1.5)
+    trace = [(r.action_type.value, r.model_id, r.worker_id, r.gpu_id,
+              r.batch_size, r.status.value, r.t_start, r.t_end, r.duration,
+              len(r.request_ids))
+             for r in cl.controller.results_log]
+    return {k: s[k] for k in ("goodput", "timeout", "rejected", "actions",
+                              "total")}, trace
+
+
+@pytest.mark.parametrize("kind", EQ_WORKLOADS)
+def test_zero_latency_loopback_equals_in_process_decisions(kind):
+    """Acceptance criterion: a seeded workload served through the
+    zero-latency loopback transport must produce the *same scheduler
+    decision trace* (full action/result sequence with exact timings) as
+    the in-process path — every action and result round-trips through the
+    real wire codec, yet nothing about the decisions changes."""
+    s_in, t_in = _run_seeded(kind, transport=False)
+    s_lb, t_lb = _run_seeded(kind, transport=True)
+    assert s_in == s_lb
+    assert t_in == t_lb
+    assert s_in["total"] > 0 and s_in["goodput"] > 0
+
+
+# ------------------------------------------------- latency / jitter / drop
+
+def test_latency_folds_into_action_windows_and_slo_holds():
+    models = _models(4)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(), seed=1,
+                       transport="loopback", latency=0.002, jitter=0.001)
+    assert all(m.net_delay == pytest.approx(0.0025)
+               for m in cl.controller.workers.values())
+    clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.060,
+                                concurrency=4) for mid in models]
+    cl.attach_clients(clients)
+    s = cl.run(2.0)
+    assert s["goodput"] > 0
+    assert s["timeout"] == 0          # windows absorbed the network delay
+
+
+def test_lossy_transport_is_deterministic_and_trips_failure_detection():
+    def run():
+        models = _models(4)
+        cl = build_cluster(models, scheduler=ClockworkScheduler(), seed=1,
+                           n_workers=2, transport="loopback", drop=0.2,
+                           transport_seed=7)
+        clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.060,
+                                    concurrency=4) for mid in models]
+        cl.attach_clients(clients)
+        s = cl.run(2.0)
+        return s, cl.runtime.dropped_frames
+
+    s1, d1 = run()
+    s2, d2 = run()
+    assert (s1, d1) == (s2, d2)       # seeded loss is bit-reproducible
+    assert d1 > 0
+    # dropped results look like missed results -> workers declared dead
+    assert s1["dead_workers"] > 0
+
+
+def test_rtt_estimation_feeds_net_delay_over_loopback():
+    models = _models(2)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(),
+                       transport="loopback", latency=0.004,
+                       fold_net_delay=False)
+    cl.runtime.server.estimate_net_delay = True
+    cl.controller.start_heartbeats()
+    cl.run(5.0)
+    m = next(iter(cl.controller.workers.values()))
+    # rtt = 2*latency + worker result_delay; estimate is rtt/2
+    expect = 0.004 + 0.0005 / 2
+    assert m.net_delay == pytest.approx(expect, rel=0.2)
+
+
+# ------------------------------------------------------------- membership
+
+def test_graceful_worker_leave_requeues_and_removes_mirror():
+    models = _models(2)
+    cl = build_cluster(models, n_workers=2, scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0", "m1"])
+    clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.100,
+                                concurrency=4) for mid in models]
+    cl.attach_clients(clients)
+    cl.loop.schedule(0.5, cl.runtime.hosts[0].shutdown)
+    s = cl.run(2.0)
+    assert "w0" not in cl.controller.workers
+    assert "w1" in cl.controller.workers
+    assert cl.controller.stats["dead_workers"] == 0   # graceful, not dead
+    late_ok = [r for r in cl.controller.completed
+               if r.status == "ok" and r.arrival > 1.0]
+    assert late_ok                     # the survivor keeps serving
+
+
+def test_connection_drop_marks_worker_failed():
+    models = _models(1)
+    cl = build_cluster(models, n_workers=2, scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0", "m0"])
+    client = ClosedLoopClient(cl.loop, cl.submit, "m0", 0.100,
+                              concurrency=8)
+    cl.attach_clients([client])
+    cl.loop.schedule(0.5, cl.runtime.links[0].close)   # yank the cable
+    s = cl.run(2.0)
+    assert cl.controller.stats["dead_workers"] == 1
+    assert "w0" not in cl.controller.workers
+    assert [r for r in cl.controller.completed
+            if r.status == "ok" and r.arrival > 1.0]
+
+
+def test_remote_request_client_submit_and_response():
+    models = _models(1)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0"])
+    link = LoopbackLink(cl.loop)
+    cl.runtime.server.adopt(link.a)
+    responses = []
+    link.b.on_message = responses.append
+    req = Request(model_id="m0", arrival=0.0, slo=0.200)
+    link.b.send(protocol.submit_msg(req))
+    cl.run(1.0)
+    assert len(responses) == 1
+    got = protocol.request_from_wire(responses[0]["request"])
+    assert got.id == req.id and got.status == "ok"
+
+
+def test_remote_clients_with_colliding_request_ids():
+    """Request ids come from per-process counters, so two client
+    processes WILL send the same id. The controller re-ids on admission
+    and each RESPONSE echoes the client's own id — both clients must get
+    exactly one response."""
+    models = _models(1)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0"])
+    resp_a, resp_b = [], []
+    links = []
+    for sink in (resp_a, resp_b):
+        link = LoopbackLink(cl.loop)
+        cl.runtime.server.adopt(link.a)
+        link.b.on_message = sink.append
+        links.append(link)
+    # one wire message, replayed verbatim from "two processes": same id
+    msg = protocol.submit_msg(Request(model_id="m0", arrival=0.0,
+                                      slo=0.200))
+    wire_id = msg["request"]["id"]
+    links[0].b.send(msg)
+    links[1].b.send(msg)
+    cl.run(1.0)
+    assert len(resp_a) == 1 and len(resp_b) == 1
+    for resp in (resp_a[0], resp_b[0]):
+        got = protocol.request_from_wire(resp["request"])
+        assert got.id == wire_id and got.status == "ok"
+    assert cl.controller.stats["goodput"] == 2
+
+
+# ------------------------------------------ shutdown telemetry flush (fix)
+
+def test_daemon_shutdown_flushes_buffered_telemetry_spans():
+    """Regression: short runs never fill the daemon's telemetry batch, so
+    without the shutdown flush the controller would end the run with zero
+    worker-side samples — and `telemetry_report` counts would diverge
+    from a single-process run."""
+    def workload(cl):
+        # clients stop before the run ends: the post-shutdown drain must
+        # not generate fresh (worker-less, hence rejected) requests
+        clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.050,
+                                    concurrency=4, stop=1.2)
+                   for mid in cl.models]
+        cl.attach_clients(clients)
+        return cl.run(1.5)
+
+    cl_in = build_cluster(_models(3), scheduler=ClockworkScheduler(),
+                          seed=2)
+    s_in = workload(cl_in)
+    rep_in = cl_in.telemetry_report()
+
+    cl_lb = build_cluster(_models(3), scheduler=ClockworkScheduler(),
+                          seed=2, transport="loopback")
+    s_lb = workload(cl_lb)
+    # before shutdown: samples are buffered in the daemons, not delivered
+    assert not [k for k in cl_lb.telemetry_report()["gauges"]
+                if k.startswith("worker/")]
+    for h in cl_lb.runtime.hosts:
+        assert h.telemetry_flushes == 0 and h._pending
+    cl_lb.shutdown()
+    rep_lb = cl_lb.telemetry_report()
+    # flushed worker gauges arrived
+    assert [k for k in rep_lb["gauges"] if k.startswith("worker/")]
+    # ...and the span/action populations match the single-process run
+    assert s_in == s_lb
+    assert rep_lb["breakdown"]["statuses"] == rep_in["breakdown"]["statuses"]
+    assert rep_lb["breakdown"]["total"]["count"] == \
+        rep_in["breakdown"]["total"]["count"]
+    assert rep_lb["prediction_error"] == rep_in["prediction_error"]
+
+
+def test_shutdown_flush_survives_transport_latency():
+    """The final TELEMETRY frame is in flight when GOODBYE is sent; FIFO
+    delivery + the drain in shutdown() must still land it."""
+    cl = build_cluster(_models(2), scheduler=ClockworkScheduler(), seed=2,
+                       transport="loopback", latency=0.003)
+    clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.060,
+                                concurrency=2) for mid in cl.models]
+    cl.attach_clients(clients)
+    cl.run(1.0)
+    cl.shutdown()
+    assert [k for k in cl.telemetry_report()["gauges"]
+            if k.startswith("worker/")]
+    for h in cl.runtime.hosts:
+        assert h.closed and not h._pending
+
+
+def test_controller_initiated_shutdown_flushes_over_latency():
+    """Regression: on a controller-sent GOODBYE the daemon must not tear
+    the channel down under its own in-flight flush — with loopback
+    latency the final TELEMETRY/ACK frames are still scheduled when the
+    daemon winds down."""
+    cl = build_cluster(_models(2), scheduler=ClockworkScheduler(), seed=2,
+                       transport="loopback", latency=0.003)
+    clients = [ClosedLoopClient(cl.loop, cl.submit, mid, 0.060,
+                                concurrency=2, stop=0.8)
+               for mid in cl.models]
+    cl.attach_clients(clients)
+    cl.run(1.0)
+    cl.runtime.server.shutdown()
+    cl.loop.run_until(cl.loop.now() + 1.0)     # drain in-flight frames
+    assert [k for k in cl.telemetry_report()["gauges"]
+            if k.startswith("worker/")]
+    for h in cl.runtime.hosts:
+        assert h.closed and not h._pending
+    assert cl.controller.stats["dead_workers"] == 0
+
+
+# ------------------------------------------------------------ timer wheel
+
+def test_missed_result_watch_uses_single_armed_sweep():
+    """The detector must not schedule one loop event per action: with N
+    outstanding watches the wheel keeps one armed sweep (plus at most one
+    re-arm per fired sweep)."""
+    models = _models(1)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(),
+                       preload=["m0"])
+    c = cl.controller
+    heap_before = len(c.loop._heap)
+    for i in range(500):
+        c._watch_action_at(10.0 + i * 1e-6, 10_000_000 + i, "w0")
+    # 500 watch entries, but only ONE new loop event (the armed sweep)
+    assert len(c._watch_heap) >= 500
+    assert len(c.loop._heap) == heap_before + 1
+    cl.run(11.0)
+    assert not c._watch_heap           # swept clean; nothing outstanding
+
+
+def test_missed_results_still_kill_worker_via_wheel():
+    models = _models(1)
+    cl = build_cluster(models, n_workers=2, scheduler=ClockworkScheduler(),
+                       preload=["m0", "m0"])
+    client = ClosedLoopClient(cl.loop, cl.submit, "m0", 0.100,
+                              concurrency=8)
+    cl.attach_clients([client])
+    # w0 silently dies: queued work never returns results
+    cl.loop.schedule(0.5, cl.workers[0].fail)
+    cl.run(3.0)
+    assert cl.controller.stats["dead_workers"] == 1
+    assert "w0" not in cl.controller.workers

@@ -1,0 +1,40 @@
+"""Multi-process TCP runtime smoke: controller + 2 worker daemons in
+separate OS processes over localhost, serving a short open-loop workload
+end to end with clean shutdown (the CI distributed smoke job runs the
+same example)."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_tcp_demo_two_worker_daemons(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    jsonl = str(tmp_path / "workertel.jsonl")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples",
+                                      "serve_distributed.py"),
+         "--smoke", "--workers", "2", "--duration", "2.0",
+         "--telemetry-jsonl", jsonl],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "SMOKE OK" in proc.stdout
+    # the printed summary is machine-readable: goodput > 0, never late
+    payload = proc.stdout[proc.stdout.index("{"):
+                          proc.stdout.rindex("}") + 1]
+    out = json.loads(payload)
+    assert out["goodput"] > 0
+    assert out["timeout"] == 0
+    assert out["worker_returncodes"] == [0, 0]
+    assert out["dead_workers"] == 0
+    # daemons streamed their local telemetry JSONL (Recorder.stream_to)
+    for i in range(2):
+        path = tmp_path / f"workertel.jsonl.w{i}"
+        assert path.exists()
+        lines = [json.loads(l) for l in path.read_text().splitlines()]
+        assert lines and all(l["kind"] == "gauge" for l in lines)

@@ -319,3 +319,88 @@ def test_profiler_cli_main_writes_store(tmp_path):
     store = ProfileStore.load(out)
     assert store.get("INFER", "resnet_tiny", 1) is not None
     assert store.get("LOAD", "resnet_tiny", 1) is not None
+
+
+# ------------------------------------------------------ Recorder streaming
+
+def _stream_some(rec, n):
+    for i in range(n):
+        rec.record_gauge("g", float(i), float(i) * 2.0)
+
+
+def test_stream_to_writes_records_continuously(tmp_path):
+    path = str(tmp_path / "stream.jsonl")
+    rec = Recorder()
+    rec.stream_to(path)
+    req = Request(model_id="m", arrival=0.0, slo=0.1)
+    rec.span_open(req, queued=0.001)
+    req.status = "ok"
+    rec.span_close(req, 0.02)
+    _stream_some(rec, 3)
+    rec.close_stream()
+    lines = [json.loads(l) for l in open(path)]
+    kinds = [l["kind"] for l in lines]
+    assert kinds == ["span", "gauge", "gauge", "gauge"]
+    assert rec.stream_lines == 4
+    # the ring buffers are unaffected by streaming
+    assert len(list(rec.iter_spans())) == 1
+
+
+def test_stream_to_rotates_and_preserves_every_line(tmp_path):
+    import os
+    path = str(tmp_path / "rot.jsonl")
+    rec = Recorder()
+    rec.stream_to(path, rotate_bytes=2_000, rotate_keep=3)
+    n = 500
+    _stream_some(rec, n)
+    rec.close_stream()
+    assert rec.stream_rotations > 0
+    files = sorted(p for p in os.listdir(tmp_path) if p.startswith("rot"))
+    assert len(files) > 1                       # rotation happened
+    assert len(files) <= 4                      # live + rotate_keep
+    total = sum(1 for p in files
+                for _ in open(os.path.join(tmp_path, p)))
+    if len(files) < 4:
+        assert total == n                       # nothing lost pre-evict
+    # every surviving file holds valid JSONL gauge lines
+    for p in files:
+        for l in open(os.path.join(tmp_path, p)):
+            assert json.loads(l)["kind"] == "gauge"
+    # live file stays under the rotation bound (+ one record of slack)
+    assert os.path.getsize(path) < 2_000 + 200
+
+
+def test_stream_to_drops_oldest_beyond_keep(tmp_path):
+    import os
+    path = str(tmp_path / "keep.jsonl")
+    rec = Recorder()
+    rec.stream_to(path, rotate_bytes=500, rotate_keep=2)
+    _stream_some(rec, 400)
+    rec.close_stream()
+    files = sorted(p for p in os.listdir(tmp_path) if p.startswith("keep"))
+    assert set(files) <= {"keep.jsonl", "keep.jsonl.1", "keep.jsonl.2"}
+    assert rec.stream_rotations > 2             # old generations evicted
+
+
+def test_streamed_jsonl_reloads_into_typed_records(tmp_path):
+    """load_jsonl is the offline-analysis inverse of stream_to: spans,
+    actions, and gauges come back as typed records that feed the same
+    report functions."""
+    from repro.telemetry import load_jsonl
+    path = str(tmp_path / "reload.jsonl")
+    rec = Recorder()
+    rec.stream_to(path)
+    req = Request(model_id="m", arrival=0.5, slo=0.1)
+    rec.span_open(req, queued=0.501)
+    req.status = "ok"
+    span = rec.span_close(req, 0.52)
+    rec.record_gauge("g", 1.0, 2.5)
+    rec.close_stream()
+    got = load_jsonl(path)
+    assert len(got["spans"]) == 1 and len(got["gauges"]) == 1
+    s = got["spans"][0]
+    assert s == span                      # NaN-free fields round-trip...
+    assert math.isnan(s.dispatched)       # ...and null stamps back to NaN
+    assert got["gauges"][0].value == 2.5
+    # reloaded records feed the standard reports unchanged
+    assert latency_breakdown(got["spans"])["statuses"] == {"ok": 1}

@@ -1,0 +1,157 @@
+"""Workload generator coverage: MAF-like trace synthesizer shapes and
+open/closed-loop client determinism under seeded RNG."""
+import math
+
+from repro.core.clock import EventLoop, VirtualClock
+from repro.serving.workload import (ClosedLoopClient, OpenLoopClient,
+                                    VariableRateClient, maf_like_rates)
+
+
+def _loop():
+    return EventLoop(VirtualClock())
+
+
+# ------------------------------------------------------------ MAF-like trace
+
+def test_maf_like_rates_covers_all_models_and_stays_nonnegative():
+    n = 200
+    fns = maf_like_rates(n, total_rate=1000.0, duration=120.0, seed=3)
+    assert set(fns) == {f"m{i}" for i in range(n)}
+    grid = [i * 7.3 for i in range(40)]
+    for fn in fns.values():
+        assert all(fn(t) >= 0.0 for t in grid)
+        assert all(math.isfinite(fn(t)) for t in grid)
+
+
+def test_maf_like_rates_shape_mix():
+    """The synthesizer promises a mix of sustained / bursty / periodic /
+    cold shapes: with enough models every category must appear —
+    time-varying models (bursty/periodic spikes) and flat ones
+    (sustained 3x boost vs cold 0.2x idle)."""
+    n = 300
+    fns = maf_like_rates(n, total_rate=1000.0, duration=120.0, seed=0)
+    grid = [i * 1.7 for i in range(120)]
+    varying = flat_hot = flat_cold = 0
+    # base zipf weights, reconstructed to classify the flat shapes
+    weights = [1.0 / (i + 1) ** 1.1 for i in range(n)]
+    wsum = sum(weights)
+    for i in range(n):
+        fn = fns[f"m{i}"]
+        vals = [fn(t) for t in grid]
+        base = 1000.0 * weights[i] / wsum
+        if max(vals) > min(vals) * 1.5 + 1e-12:
+            varying += 1
+        elif vals[0] >= base * 2.9:
+            flat_hot += 1
+        elif vals[0] <= base * 0.21:
+            flat_cold += 1
+    assert varying > 0.25 * n          # ~50% bursty+periodic by design
+    assert flat_hot > 0.02 * n         # ~10% sustained
+    assert flat_cold > 0.15 * n        # ~40% cold
+    # spikes really spike: some model exceeds 5x its floor
+    assert any(max(fn(t) for t in grid) >
+               5.0 * min(fn(t) for t in grid) + 1e-12
+               for fn in fns.values())
+
+
+def test_maf_like_rates_deterministic_under_seed():
+    a = maf_like_rates(50, total_rate=300.0, duration=60.0, seed=11)
+    b = maf_like_rates(50, total_rate=300.0, duration=60.0, seed=11)
+    c = maf_like_rates(50, total_rate=300.0, duration=60.0, seed=12)
+    grid = [i * 0.9 for i in range(50)]
+    assert all(a[m](t) == b[m](t) for m in a for t in grid)
+    assert any(a[m](t) != c[m](t) for m in a for t in grid)
+
+
+# ------------------------------------------------------- open-loop clients
+
+def _collect_arrivals(make_client, t_end=10.0):
+    loop = _loop()
+    arrivals = []
+    make_client(loop, lambda req: arrivals.append((req.model_id,
+                                                   req.arrival)))
+    loop.run_until(t_end)
+    return arrivals
+
+
+def test_open_loop_poisson_deterministic_and_bounded_by_stop():
+    def mk(seed):
+        return lambda loop, submit: OpenLoopClient(
+            loop, submit, "m0", 0.1, rate=200.0, stop=5.0, seed=seed)
+
+    a = _collect_arrivals(mk(7))
+    b = _collect_arrivals(mk(7))
+    c = _collect_arrivals(mk(8))
+    assert a == b                       # bit-identical under equal seed
+    assert a != c
+    assert a, "no arrivals generated"
+    assert all(t < 5.0 for _, t in a)
+    # Poisson sanity: ~rate*stop arrivals, loose 4-sigma band
+    assert abs(len(a) - 1000) < 4 * 1000 ** 0.5 + 50
+
+
+def test_open_loop_zero_rate_sends_nothing():
+    a = _collect_arrivals(lambda loop, submit: OpenLoopClient(
+        loop, submit, "m0", 0.1, rate=0.0, stop=5.0, seed=1))
+    assert a == []
+
+
+def test_variable_rate_client_deterministic_and_thinned():
+    def fn(t):
+        return 50.0 if t < 2.0 else 5.0
+
+    def mk(seed):
+        return lambda loop, submit: VariableRateClient(
+            loop, submit, "m0", 0.1, fn, stop=4.0, seed=seed,
+            max_rate=100.0)
+
+    a = _collect_arrivals(mk(3))
+    b = _collect_arrivals(mk(3))
+    assert a == b and a
+    assert all(t < 4.0 for _, t in a)
+    early = sum(1 for _, t in a if t < 2.0)
+    late = len(a) - early
+    # thinning must track the rate function: ~100 early vs ~10 late
+    assert early > 3 * max(late, 1)
+
+
+# ------------------------------------------------------ closed-loop client
+
+def test_closed_loop_keeps_concurrency_outstanding():
+    loop = _loop()
+    inflight = []
+
+    def submit(req):
+        inflight.append(req)
+
+    c = ClosedLoopClient(loop, submit, "m0", 0.1, concurrency=3)
+    loop.run_until(0.0)
+    assert len(inflight) == 3           # initial burst
+    # responding to one triggers exactly one replacement
+    done = inflight.pop(0)
+    done.status = "ok"
+    c.on_response(done)
+    loop.run_until(0.001)
+    assert len(inflight) == 3
+    assert c.sent == 4
+    # responses for other models are ignored
+    class Other:
+        model_id = "other"
+    c.on_response(Other())
+    loop.run_until(0.002)
+    assert c.sent == 4
+
+
+def test_closed_loop_respects_stop():
+    loop = _loop()
+    sent = []
+    c = ClosedLoopClient(loop, sent.append, "m0", 0.1, concurrency=2,
+                         stop=1.0)
+    loop.run_until(0.0)
+    assert len(sent) == 2
+    loop.clock.advance_to(2.0)
+    for r in list(sent):
+        r.status = "ok"
+        c.on_response(r)
+    loop.run_until(3.0)
+    assert len(sent) == 2               # nothing sent past stop
