@@ -9,9 +9,16 @@ JSON summary (goodput, latency percentiles, per-worker network-delay
 estimates, telemetry counts), then winds the daemons down gracefully —
 each flushes its buffered telemetry before leaving.
 
+`--loadgen` completes the paper's three-tier topology: instead of
+in-process clients, a `python -m repro.runtime.loadgen` subprocess (with
+`--loadgen-processes` child generators) drives the controller over its
+own TCP connections and reports *client-observed* goodput and latency —
+the summary then carries both the controller's and the clients' view.
+
 `--smoke` makes the run assert (goodput > 0, zero timeouts' spirit —
-completed-late must be 0 by construction, workers exit 0) so CI can use
-it as the distributed smoke job.
+completed-late must be 0 by construction, workers exit 0, and with
+`--loadgen` nonzero client-observed goodput) so CI can use it as the
+distributed smoke job.
 """
 from __future__ import annotations
 
@@ -44,6 +51,15 @@ def main(argv=None) -> int:
     ap.add_argument("--telemetry-jsonl", default=None,
                     help="daemons stream telemetry JSONL next to this "
                          "prefix (one file per worker)")
+    ap.add_argument("--loadgen", action="store_true",
+                    help="drive the workload from a separate loadgen "
+                         "process (full three-tier topology) instead of "
+                         "in-process clients")
+    ap.add_argument("--loadgen-processes", type=int, default=2,
+                    help="child generator processes under --loadgen")
+    ap.add_argument("--workload", default="open",
+                    choices=("open", "closed", "maf"),
+                    help="workload shape for --loadgen")
     args = ap.parse_args(argv)
 
     models = demo_models(args.n_models)
@@ -60,6 +76,7 @@ def main(argv=None) -> int:
 
     env = dict(os.environ)
     procs = []
+    lg = None
     for i in range(args.workers):
         cmd = [sys.executable, "-m", "repro.runtime.worker",
                "--controller", f"127.0.0.1:{port}",
@@ -79,18 +96,46 @@ def main(argv=None) -> int:
         print(f"[controller] {len(controller.workers)} workers registered",
               flush=True)
 
-        now = loop.now()
-        clients = [OpenLoopClient(loop, controller.on_request, mid,
-                                  args.slo, rate=args.rate, start=now,
-                                  stop=now + args.duration, seed=i)
-                   for i, mid in enumerate(models)]
+        clients, client_out = [], None
         controller.start_heartbeats()
-        pump.run(timeout=args.duration + 0.5)
+        if args.loadgen:
+            # third tier: the workload lives in its own process(es) and
+            # measures latency on its side of the network
+            lg_cmd = [sys.executable, "-m", "repro.runtime.loadgen",
+                      "--controller", f"127.0.0.1:{port}",
+                      "--workload", args.workload,
+                      "--n-models", str(args.n_models),
+                      "--rate", str(args.rate), "--slo", str(args.slo),
+                      "--duration", str(args.duration),
+                      "--processes", str(args.loadgen_processes)]
+            lg = subprocess.Popen(lg_cmd, env=env, stdout=subprocess.PIPE,
+                                  text=True)
+            pump.run(until=lambda: lg.poll() is not None,
+                     timeout=args.duration + 90.0)
+            try:
+                lg_stdout, _ = lg.communicate(timeout=10.0)
+            except subprocess.TimeoutExpired:
+                lg.kill()
+                lg_stdout, _ = lg.communicate()
+            if not lg_stdout.strip():
+                print("FATAL: loadgen produced no output", file=sys.stderr)
+                return 3
+            client_out = json.loads(lg_stdout)
+            client_out["returncode"] = lg.returncode
+        else:
+            now = loop.now()
+            clients = [OpenLoopClient(loop, controller.on_request, mid,
+                                      args.slo, rate=args.rate, start=now,
+                                      stop=now + args.duration, seed=i)
+                       for i, mid in enumerate(models)]
+            pump.run(timeout=args.duration + 0.5)
 
         summary = controller.summary()
         net = {wid: round(m.net_delay * 1e6)
                for wid, m in controller.workers.items()}
     finally:
+        if lg is not None and lg.poll() is None:
+            lg.kill()              # never orphan the loadgen tree
         server.shutdown()          # daemons flush telemetry and leave
         pump.run(timeout=1.0)      # let final TELEMETRY/GOODBYE frames land
         pump.stop()
@@ -105,9 +150,13 @@ def main(argv=None) -> int:
                 pr.kill()
                 rcs.append(-9)
 
-    out = {"sent": sum(c.sent for c in clients), **summary,
+    sent = client_out["sent"] if client_out is not None \
+        else sum(c.sent for c in clients)
+    out = {"sent": sent, **summary,
            "net_delay_us": net, "worker_returncodes": rcs,
            "worker_gauges": worker_gauges}
+    if client_out is not None:
+        out["client"] = client_out
     print(json.dumps(out, indent=2, default=str))
 
     if args.smoke:
@@ -116,6 +165,14 @@ def main(argv=None) -> int:
         assert all(rc == 0 for rc in rcs), f"unclean worker exit: {rcs}"
         assert out["dead_workers"] == 0, "worker falsely declared dead"
         assert worker_gauges, "daemon telemetry never reached controller"
+        if client_out is not None:
+            assert client_out["returncode"] == 0, "loadgen exited unclean"
+            assert client_out["goodput"] > 0, \
+                "no client-observed completions"
+            assert client_out["timeout"] == 0, \
+                "client observed a late response"
+            assert client_out["goodput"] == out["goodput"], \
+                "client/controller goodput disagree"
         print("SMOKE OK")
     return 0
 

@@ -13,8 +13,18 @@ Lifts the in-process Controller/Worker pair across a process boundary:
 * `worker` — WorkerHost/WorkerDaemon (`python -m repro.runtime.worker`):
   registers with the controller, executes actions via the existing core
   Worker + backends, and streams results + telemetry back.
+* `client` — RemoteClient: the SUBMIT/RESPONSE request client with
+  client-side send/receive stamps, per-request latency spans in a local
+  Recorder, and skew-free network-overhead stitching from the RESPONSE's
+  echoed controller stamps.
+* `loadgen` — the load-generator process (`python -m
+  repro.runtime.loadgen`): drives the seeded serving/workload generators
+  through RemoteClients over TCP (optionally multi-process) and reports
+  client-observed goodput + latency percentiles — the third tier of the
+  paper's topology.
 * `harness` — builds loopback "distributed" clusters that plug into the
-  existing simulator Cluster API, and demo model sets shared by both
+  existing simulator Cluster API (plus `attach_remote_client` for the
+  client tier on the virtual clock), and demo model sets shared by both
   sides of the TCP demo.
 """
 from repro.runtime.protocol import PROTOCOL_VERSION  # noqa: F401

@@ -17,17 +17,29 @@ instead, keeping virtual-clock runs deterministic.
 
 Channels whose first message is SUBMIT instead of HELLO are request
 clients: decoded Requests enter `Controller.on_request` and their
-completions return as RESPONSE frames.
+completions return as RESPONSE frames. Client channels are tracked with
+their in-flight request ids so a disconnect reclaims everything: the ids
+are purged from `_req_origin` and responses for a departed client are
+dropped instead of sent into a closed pipe.
+
+Hardening: every frame handler runs behind `_frame_handler`, which turns
+a `ProtocolError` (bad version, malformed frame) or a codec-level
+KeyError/ValueError/TypeError into a logged close of the *offending
+channel* — a garbage frame from one peer must never crash the shared
+controller event loop.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Dict, List, Optional
+import logging
+from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.actions import Request
 from repro.core.controller import Controller
 from repro.runtime import protocol
 from repro.runtime.transport import Channel, TcpServer
+
+log = logging.getLogger("repro.runtime")
 
 
 class _PageSpec:
@@ -74,31 +86,42 @@ class RemoteWorkerStub:
 
     # ---------------------------------------------------- frame handling
     def handle(self, msg: dict) -> None:
+        # wire decoding goes through protocol.field/decode, which turn
+        # structural garbage into ProtocolError for the server's frame
+        # guard; the controller calls that follow run unguarded, so an
+        # internal bug still fails loudly instead of being misread as a
+        # bad frame from this worker
         kind = msg.get("kind")
         c = self.server.controller
         if kind == "result":
-            r = protocol.result_from_wire(msg["result"])
+            r = protocol.decode(protocol.result_from_wire,
+                                protocol.field(msg, "result"))
             if self.on_result is not None:
                 self.on_result(r)
         elif kind == "pong":
-            entry = self._pings.pop(msg["seq"], None)
+            seq = protocol.field(msg, "seq")
+            if isinstance(seq, (dict, list)):
+                raise protocol.ProtocolError("pong seq is unhashable")
+            entry = self._pings.pop(seq, None)
             if entry is None:
                 return
             reply, t_sent = entry
             if self.server.estimate_net_delay:
-                rtt = c.loop.now() - t_sent
-                # subtract the worker's own reply turnaround? the stamp we
-                # echo is the send time, so rtt includes the worker's
-                # result_delay — the same asymmetry the in-process path has
+                # the PONG echoes the worker's reply turnaround (`hold`):
+                # subtracting it leaves the pure network round-trip, so a
+                # slow-to-answer worker no longer inflates its net_delay
+                hold = protocol.decode(float, msg.get("hold", 0.0))
+                rtt = max(0.0, c.loop.now() - t_sent - hold)
                 c.observe_net_delay(self.worker_id, rtt)
             reply()
         elif kind == "telemetry":
             rec = c.recorder
-            for wire in msg.get("gauges", ()):
-                g = protocol.gauge_from_wire(wire)
+            for wire in protocol.decode(tuple, msg.get("gauges", ())):
+                g = protocol.decode(protocol.gauge_from_wire, wire)
                 rec.record_gauge(g.name, g.t, g.value)
         elif kind == "sync":
-            self.channel.send(protocol.sync_ack(msg["t0"], c.loop.now()))
+            self.channel.send(protocol.sync_ack(protocol.field(msg, "t0"),
+                                                c.loop.now()))
         elif kind == "goodbye":
             self.graceful = True
             self.alive = False
@@ -122,11 +145,14 @@ class ControllerServer:
         self.controller = controller
         self.estimate_net_delay = estimate_net_delay
         self.stubs: Dict[str, RemoteWorkerStub] = {}
-        self.clients: List[Channel] = []
+        # client channel -> its in-flight local request ids; removed (with
+        # the ids purged from _req_origin) when the channel closes
+        self.clients: Dict[Channel, Set[int]] = {}
         # local request id -> (origin channel, the client's own id)
         self._req_origin: Dict[int, tuple] = {}
         self._tcp: Optional[TcpServer] = None
         self.closed = False
+        self.bad_frames = 0          # channels closed on malformed input
 
         prev = controller.on_response
 
@@ -136,15 +162,37 @@ class ControllerServer:
             origin = self._req_origin.pop(req.id, None)
             if origin is not None:
                 ch, remote_id = origin
+                inflight = self.clients.get(ch)
+                if inflight is None:
+                    return           # client left; drop, don't send
+                inflight.discard(req.id)
                 ch.send(protocol.response_msg(req, override_id=remote_id))
 
         controller.on_response = fan
 
     # ------------------------------------------------------- channel intake
+    def _frame_handler(self, channel: Channel,
+                       fn: Callable[[dict], None]) -> Callable[[dict], None]:
+        """Wrap a per-frame handler so malformed input closes the offending
+        channel instead of raising into the shared event loop. Handlers
+        funnel all wire decoding through protocol.field/decode, so only
+        ProtocolError means "bad frame" — an internal controller bug still
+        propagates loudly rather than being pinned on an innocent peer."""
+        def handle(msg: dict) -> None:
+            try:
+                fn(msg)
+            except protocol.ProtocolError as e:
+                self.bad_frames += 1
+                log.warning("closing channel after bad frame "
+                            "(kind=%r): %s", msg.get("kind"), e)
+                channel.close()
+        return handle
+
     def adopt(self, channel: Channel) -> None:
         """Take ownership of a fresh channel; the first frame decides
         whether it is a worker (HELLO) or a request client (SUBMIT)."""
-        channel.on_message = lambda msg: self._first_frame(channel, msg)
+        channel.on_message = self._frame_handler(
+            channel, lambda msg: self._first_frame(channel, msg))
         channel.on_close = lambda: None
 
     def _first_frame(self, channel: Channel, msg: dict) -> None:
@@ -153,14 +201,19 @@ class ControllerServer:
         if kind == "hello":
             self._register_worker(channel, msg)
         elif kind == "submit":
-            self.clients.append(channel)
-            channel.on_message = lambda m: self._client_frame(channel, m)
+            self.clients[channel] = set()
+            channel.on_message = self._frame_handler(
+                channel, lambda m: self._client_frame(channel, m))
+            channel.on_close = lambda: self._client_closed(channel)
             self._client_frame(channel, msg)
         else:
             channel.close()
 
     def _register_worker(self, channel: Channel, msg: dict) -> None:
-        wid = msg["worker_id"]
+        # decode/validate the whole HELLO before touching controller state
+        wid = protocol.decode(str, protocol.field(msg, "worker_id"))
+        gpu_specs = protocol.decode(protocol.gpus_from_hello, msg)
+        profiles = protocol.decode(protocol.profiles_from_hello, msg)
         if wid in self.controller.workers:
             # a stale registration (daemon restart): retire the old mirror
             # gracefully — outstanding work is requeued, but a planned
@@ -171,17 +224,26 @@ class ControllerServer:
                 old.alive = False
                 old.channel.close()
             self.controller.remove_worker(wid)
-        stub = RemoteWorkerStub(channel, wid, msg["gpus"], self)
+        stub = RemoteWorkerStub(channel, wid, gpu_specs, self)
         self.stubs[wid] = stub
-        channel.on_message = stub.handle
+        channel.on_message = self._frame_handler(channel, stub.handle)
         channel.on_close = stub.handle_close
-        self.controller.add_worker(stub, protocol.profiles_from_hello(msg))
+        self.controller.add_worker(stub, profiles)
         channel.send(protocol.welcome(
             wid, self.controller.heartbeat_interval))
 
     def _client_frame(self, channel: Channel, msg: dict) -> None:
         if msg.get("kind") == "submit":
-            wire = protocol.request_from_wire(msg["request"])
+            wire = protocol.decode(protocol.request_from_wire,
+                                   protocol.field(msg, "request"))
+            if wire.model_id not in self.controller.models:
+                # unknown model: reject on the spot — the name must never
+                # enter the scheduler (its queues are a defaultdict, and a
+                # bogus key would only blow up later, outside the guard)
+                wire.status = "rejected"
+                wire.completion = self.controller.loop.now()
+                channel.send(protocol.response_msg(wire))
+                return
             # re-issue the id: client-process id counters collide with each
             # other and with controller-local requests. The remote arrival
             # stamp is likewise meaningless on this clock — admission time
@@ -190,7 +252,18 @@ class ControllerServer:
                           arrival=self.controller.loop.now(),
                           slo=wire.slo, batchable=wire.batchable)
             self._req_origin[req.id] = (channel, wire.id)
+            self.clients[channel].add(req.id)
             self.controller.on_request(req)
+
+    def _client_closed(self, channel: Channel) -> None:
+        """Reclaim a departed client: requests still in flight keep being
+        served (the scheduler already committed to them) but their origin
+        entries go away, so completions are counted and dropped rather
+        than sent into a closed channel."""
+        inflight = self.clients.pop(channel, None)
+        if inflight:
+            for rid in inflight:
+                self._req_origin.pop(rid, None)
 
     # -------------------------------------------------------------- TCP
     def listen_tcp(self, host: str, port: int,

@@ -25,6 +25,7 @@ from repro.core.clock import EventLoop, VirtualClock
 from repro.core.controller import Controller
 from repro.core.scheduler import ClockworkScheduler
 from repro.core.worker import ModelDef, Worker
+from repro.runtime.client import RemoteClient
 from repro.runtime.controller import ControllerServer
 from repro.runtime.transport import LoopbackLink
 from repro.runtime.worker import WorkerHost
@@ -41,6 +42,8 @@ class LoopbackRuntime:
     hosts: List[WorkerHost]
     links: List[LoopbackLink]
     loop: EventLoop
+    # RemoteClients attached via attach_remote_client (third tier)
+    clients: List[RemoteClient] = dataclasses.field(default_factory=list)
 
     def shutdown(self, drain_s: float = 1.0) -> None:
         """Daemon-initiated graceful leave for every worker host (each
@@ -121,3 +124,32 @@ def build_loopback_cluster(
                    models=models,
                    runtime=LoopbackRuntime(server=server, hosts=hosts,
                                            links=links, loop=loop))
+
+
+def attach_remote_client(cluster: Cluster, *, latency: float = 0.0,
+                         jitter: float = 0.0, drop: float = 0.0,
+                         transport_seed: int = 54321,
+                         recorder: Optional[Recorder] = None
+                         ) -> RemoteClient:
+    """Connect a `RemoteClient` to a loopback cluster's ControllerServer
+    over its own seeded LoopbackLink — the client tier of the paper's
+    topology, on the virtual clock.
+
+    At zero latency the SUBMIT/RESPONSE round-trip is synchronous inside
+    the sender's event, so a seeded workload driven through the returned
+    client produces a decision trace *identical* to in-process
+    `attach_clients` (pinned by tests/test_client.py). With latency/
+    jitter configured it reproduces client-side network conditions
+    deterministically.
+    """
+    rt = cluster.runtime
+    if not isinstance(rt, LoopbackRuntime):
+        raise ValueError("attach_remote_client needs a loopback cluster "
+                         "(build_cluster(transport='loopback'))")
+    link = LoopbackLink(rt.loop, latency=latency, jitter=jitter, drop=drop,
+                        seed=transport_seed)
+    rt.server.adopt(link.a)
+    client = RemoteClient(rt.loop, link.b, recorder=recorder)
+    rt.links.append(link)
+    rt.clients.append(client)
+    return client

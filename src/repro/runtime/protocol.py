@@ -98,6 +98,27 @@ def check_version(msg: dict) -> dict:
     return msg
 
 
+def field(msg: dict, key: str):
+    """Required frame field; missing => ProtocolError (frame boundary)."""
+    try:
+        return msg[key]
+    except (KeyError, TypeError):
+        raise ProtocolError(f"frame missing field {key!r}") from None
+
+
+def decode(codec, payload):
+    """Run a codec over untrusted payload, converting structural errors
+    into ProtocolError — so frame handlers raise exactly one exception
+    type for malformed input and the server's frame-boundary guard can
+    close the offending channel without also swallowing internal bugs."""
+    try:
+        return codec(payload)
+    except (KeyError, ValueError, TypeError, IndexError,
+            AttributeError) as e:
+        name = getattr(codec, "__name__", "codec")
+        raise ProtocolError(f"malformed payload for {name}: {e}") from e
+
+
 def _msg(kind: str, **fields) -> dict:
     fields["v"] = PROTOCOL_VERSION
     fields["kind"] = kind
@@ -117,14 +138,21 @@ def action_to_wire(a: Action) -> dict:
 
 
 def action_from_wire(d: dict) -> Action:
-    return Action(type=ActionType(d["type"]), model_id=d["model_id"],
-                  worker_id=d["worker_id"], gpu_id=d["gpu_id"],
-                  earliest=d["earliest"], latest=d["latest"],
-                  expected_duration=d["expected_duration"],
-                  batch_size=d.get("batch_size", 1),
-                  request_ids=tuple(d.get("request_ids", ())),
-                  id=d["id"], issued_at=d.get("issued_at", 0.0),
-                  expected_completion=d.get("expected_completion", 0.0))
+    # type coercions are identity for well-formed frames (float of a
+    # float, int of an int) but turn malicious values — a string where
+    # arithmetic expects a number — into errors *inside* `decode`, at
+    # the frame boundary, instead of deep in the controller/worker
+    return Action(type=ActionType(d["type"]), model_id=str(d["model_id"]),
+                  worker_id=str(d["worker_id"]), gpu_id=int(d["gpu_id"]),
+                  earliest=float(d["earliest"]), latest=float(d["latest"]),
+                  expected_duration=float(d["expected_duration"]),
+                  batch_size=int(d.get("batch_size", 1)),
+                  request_ids=tuple(int(i)
+                                    for i in d.get("request_ids", ())),
+                  id=int(d["id"]),
+                  issued_at=float(d.get("issued_at", 0.0)),
+                  expected_completion=float(
+                      d.get("expected_completion", 0.0)))
 
 
 def result_to_wire(r: Result) -> dict:
@@ -138,15 +166,16 @@ def result_to_wire(r: Result) -> dict:
 
 
 def result_from_wire(d: dict) -> Result:
-    return Result(action_id=d["action_id"],
+    return Result(action_id=int(d["action_id"]),
                   action_type=ActionType(d["action_type"]),
-                  model_id=d["model_id"], worker_id=d["worker_id"],
-                  gpu_id=d["gpu_id"], status=ResultStatus(d["status"]),
-                  t_start=d["t_start"], t_end=d["t_end"],
-                  duration=d["duration"],
-                  batch_size=d.get("batch_size", 1),
-                  request_ids=tuple(d.get("request_ids", ())),
-                  t_received=d.get("t_received", 0.0))
+                  model_id=str(d["model_id"]), worker_id=str(d["worker_id"]),
+                  gpu_id=int(d["gpu_id"]), status=ResultStatus(d["status"]),
+                  t_start=float(d["t_start"]), t_end=float(d["t_end"]),
+                  duration=float(d["duration"]),
+                  batch_size=int(d.get("batch_size", 1)),
+                  request_ids=tuple(int(i)
+                                    for i in d.get("request_ids", ())),
+                  t_received=float(d.get("t_received", 0.0)))
 
 
 def request_to_wire(r: Request) -> dict:
@@ -156,11 +185,14 @@ def request_to_wire(r: Request) -> dict:
 
 
 def request_from_wire(d: dict) -> Request:
-    return Request(model_id=d["model_id"], arrival=d["arrival"],
-                   slo=d["slo"], id=d["id"],
-                   batchable=d.get("batchable", True),
-                   completion=d.get("completion"),
-                   status=d.get("status"))
+    completion = d.get("completion")
+    status = d.get("status")
+    return Request(model_id=str(d["model_id"]), arrival=float(d["arrival"]),
+                   slo=float(d["slo"]), id=int(d["id"]),
+                   batchable=bool(d.get("batchable", True)),
+                   completion=None if completion is None
+                   else float(completion),
+                   status=None if status is None else str(status))
 
 
 def gauge_to_wire(g: GaugeSample) -> list:
@@ -168,7 +200,7 @@ def gauge_to_wire(g: GaugeSample) -> list:
 
 
 def gauge_from_wire(x: list) -> GaugeSample:
-    return GaugeSample(name=x[0], t=x[1], value=x[2])
+    return GaugeSample(name=str(x[0]), t=float(x[1]), value=float(x[2]))
 
 
 # ------------------------------------------------------------ constructors
@@ -184,11 +216,18 @@ def hello(worker_id: str, gpus: List[dict],
                 profiles=wire_profiles)
 
 
+def gpus_from_hello(msg: dict) -> List[dict]:
+    """Validated pagecache geometry from a HELLO (ints or it's a
+    ProtocolError via `decode`)."""
+    return [{"total_pages": int(g["total_pages"]),
+             "page_bytes": int(g["page_bytes"])} for g in field(msg, "gpus")]
+
+
 def profiles_from_hello(msg: dict) -> Optional[dict]:
     wire = msg.get("profiles")
     if not wire:
         return None
-    return {(t, mid, b): d for t, mid, b, d in wire}
+    return {(str(t), str(mid), int(b)): float(d) for t, mid, b, d in wire}
 
 
 def welcome(worker_id: str, heartbeat_interval: float) -> dict:
@@ -200,8 +239,11 @@ def ping(seq: int, t_sent: float) -> dict:
     return _msg("ping", seq=seq, t_sent=t_sent)
 
 
-def pong(seq: int, t_sent: float) -> dict:
-    return _msg("pong", seq=seq, t_sent=t_sent)
+def pong(seq: int, t_sent: float, hold: float = 0.0) -> dict:
+    """`hold` is the worker's reply turnaround (local receive -> send, in
+    seconds): the controller subtracts it from the measured round-trip so
+    net-delay estimates cover the network, not the worker's result_delay."""
+    return _msg("pong", seq=seq, t_sent=t_sent, hold=hold)
 
 
 def sync(t0: float) -> dict:

@@ -124,9 +124,16 @@ class WorkerHost:
             self.worker.receive(a)
         elif kind == "ping":
             if self.worker.alive:
-                reply = protocol.pong(msg["seq"], msg["t_sent"])
-                self.loop.schedule_in(self.worker.result_delay,
-                                      lambda: self.channel.send(reply))
+                t_recv = self.loop.now()
+
+                def reply(seq=msg["seq"], t_sent=msg["t_sent"],
+                          t_recv=t_recv):
+                    # echo the actual turnaround so the controller's RTT
+                    # measurement excludes our reply delay
+                    hold = self.loop.now() - t_recv
+                    self.channel.send(protocol.pong(seq, t_sent, hold))
+
+                self.loop.schedule_in(self.worker.result_delay, reply)
         elif kind == "sync_ack":
             self.sync.observe(msg["t0"], msg["t_remote"], self.loop.now())
         elif kind == "welcome":

@@ -1,11 +1,17 @@
 """Workload generators: closed-loop clients, open-loop Poisson clients, and
 an MAF-like trace synthesizer (Microsoft Azure Functions workload shapes:
-sustained / bursty / periodic / cold — §6.5 of the paper)."""
+sustained / bursty / periodic / cold — §6.5 of the paper).
+
+Every generator drives an arbitrary `submit(Request)` callable, so the
+same seeded workload runs against an in-process controller
+(`Cluster.submit`), a loopback `RemoteClient.submit`, or a real TCP
+client in the load-generator process (`python -m repro.runtime.loadgen`)
+— `build_workload` is the one factory all three paths share."""
 from __future__ import annotations
 
 import math
 import random
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.actions import Request
 from repro.core.clock import EventLoop
@@ -104,6 +110,57 @@ class VariableRateClient:
             self._send()
 
         self.loop.schedule(t, fire)
+
+
+# ------------------------------------------------------------- the factory
+
+WORKLOAD_KINDS = ("open", "closed", "maf")
+
+
+def build_workload(loop: EventLoop, submit: Callable[[Request], None],
+                   model_ids: Sequence[str], *, kind: str = "open",
+                   slo: float = 0.100, rate: float = 10.0,
+                   concurrency: int = 4, start: float = 0.0,
+                   duration: float = 60.0, seed: int = 0,
+                   total_rate: Optional[float] = None,
+                   max_rate: float = 1000.0) -> list:
+    """Build the standard generator mix over any submit callable.
+
+    kind "open": one Poisson OpenLoopClient per model at `rate` r/s;
+    "closed": one ClosedLoopClient per model with `concurrency`
+    outstanding; "maf": MAF-shaped VariableRateClients splitting
+    `total_rate` (default `rate * len(model_ids)`) across models. `start`
+    offsets every generator onto the caller's clock (a TCP loadgen joins
+    at loop.now() > 0; rate functions are phase-shifted to match), and
+    `seed` makes the whole mix reproducible.
+    """
+    stop = start + duration
+    clients: list = []
+    if kind == "open":
+        for i, mid in enumerate(model_ids):
+            clients.append(OpenLoopClient(loop, submit, mid, slo, rate=rate,
+                                          start=start, stop=stop,
+                                          seed=seed + i))
+    elif kind == "closed":
+        for i, mid in enumerate(model_ids):
+            clients.append(ClosedLoopClient(loop, submit, mid, slo,
+                                            concurrency=concurrency,
+                                            start=start, stop=stop))
+    elif kind == "maf":
+        fns = maf_like_rates(len(model_ids),
+                             total_rate if total_rate is not None
+                             else rate * len(model_ids),
+                             duration, seed=seed)
+        for i, mid in enumerate(model_ids):
+            fn = fns[f"m{i}"]
+            clients.append(VariableRateClient(
+                loop, submit, mid, slo,
+                rate_fn=lambda t, fn=fn, s=start: fn(t - s),
+                start=start, stop=stop, seed=seed + i, max_rate=max_rate))
+    else:
+        raise ValueError(f"unknown workload kind {kind!r}; "
+                         f"choose from {WORKLOAD_KINDS}")
+    return clients
 
 
 # ----------------------------------------------------------- MAF-like trace

@@ -51,6 +51,13 @@ class RequestSpan:
     batch_size: int = 0
     attempts: int = 0          # dispatch count (>1 => requeued after reject)
     cold_start: bool = False
+    # client-side spans only: the controller-clock [admission, completion]
+    # interval echoed back in the RESPONSE. Both stamps share the remote
+    # clock, so their difference is skew-free — `net_overhead` is the part
+    # of the client-observed latency the controller never saw (network
+    # legs + controller-side framing).
+    remote_arrival: float = NAN
+    remote_completion: float = NAN
 
     # ---------------------------------------------------------- breakdown
     @property
@@ -67,6 +74,16 @@ class RequestSpan:
     def total(self) -> float:
         return self.response - self.arrival
 
+    @property
+    def remote_total(self) -> float:
+        """Controller-observed latency (admission -> completion)."""
+        return self.remote_completion - self.remote_arrival
+
+    @property
+    def net_overhead(self) -> float:
+        """Client-observed minus controller-observed latency."""
+        return self.total - self.remote_total
+
     def to_dict(self) -> dict:
         # never-stamped phases export as null, keeping the JSONL strict
         return {k: (None if isinstance(v, float) and math.isnan(v) else v)
@@ -79,7 +96,8 @@ class RequestSpan:
         fields = {f.name for f in dataclasses.fields(cls)}
         kw = {k: v for k, v in d.items() if k in fields}
         for k in ("queued", "dispatched", "load_start", "load_end",
-                  "exec_start", "exec_end", "response"):
+                  "exec_start", "exec_end", "response",
+                  "remote_arrival", "remote_completion"):
             if kw.get(k) is None:
                 kw[k] = NAN
         return cls(**kw)

@@ -82,6 +82,17 @@ class Recorder:
                 s.exec_start = t_start
                 s.exec_end = t_end
 
+    def span_remote(self, request_id: int, arrival, completion):
+        """Stamp the controller-side [admission, completion] interval onto
+        an open *client-side* span (the RESPONSE echoes both stamps). Both
+        stamps share the controller clock, so their difference — and thus
+        the span's `net_overhead` — is immune to client/controller skew."""
+        s = self._open.get(request_id)
+        if s is None or arrival is None or completion is None:
+            return
+        s.remote_arrival = arrival
+        s.remote_completion = completion
+
     def span_load(self, model_id: str, t_start: float, t_end: float):
         """Attribute a completed LOAD to the requests it unblocked: open
         spans of that model still waiting to be dispatched. Already-

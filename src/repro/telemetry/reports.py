@@ -64,6 +64,29 @@ def latency_breakdown(spans: Iterable) -> dict:
             "statuses": statuses, "cold_starts": cold}
 
 
+def client_breakdown(spans: Iterable) -> dict:
+    """Client-side view over RemoteClient spans: client-observed latency,
+    the controller-observed portion echoed back in each RESPONSE, and the
+    network/framing overhead between the two (skew-free per request —
+    see RequestSpan.net_overhead). This is the third-tier complement of
+    `latency_breakdown`: the controller's report says how long serving
+    took, this one says how long the *client waited*."""
+    total, remote, net = [], [], []
+    statuses: Dict[str, int] = {}
+    for s in spans:
+        statuses[s.status or "open"] = statuses.get(s.status or "open", 0) + 1
+        if s.status != "ok":
+            continue
+        total.append(s.total)
+        if not math.isnan(s.remote_total):
+            remote.append(s.remote_total)
+            net.append(s.net_overhead)
+    return {"client_total": latency_summary(total),
+            "controller_total": latency_summary(remote),
+            "net_overhead": latency_summary(net),
+            "statuses": statuses}
+
+
 # ---------------------------------------------------------------- actions
 def prediction_error_report(records: Iterable) -> dict:
     """Fig-9 over/under prediction-error stats from ActionRecords."""

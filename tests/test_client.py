@@ -1,0 +1,287 @@
+"""Client-tier tests: RemoteClient decision-trace equivalence with
+in-process clients, loadgen-workload determinism under seeded loopback,
+client-side span stitching, and the hardened SUBMIT/RESPONSE path
+(disconnect with requests in flight, malformed/mismatched frames,
+unknown-model rejection)."""
+import argparse
+import math
+
+import pytest
+
+from repro.core.actions import Request
+from repro.core.scheduler import ClockworkScheduler
+from repro.runtime import protocol
+from repro.runtime.harness import attach_remote_client
+from repro.runtime.transport import LoopbackLink
+from repro.serving.simulator import build_cluster, table1_modeldef
+from repro.serving.workload import build_workload
+from repro.telemetry.reports import client_breakdown
+
+
+def _models(n):
+    return {f"m{i}": table1_modeldef(f"m{i}") for i in range(n)}
+
+
+WORKLOADS = ["open", "closed", "maf"]
+
+
+def _run_seeded(kind, *, remote):
+    """One seeded workload, driven either by in-process attach_clients or
+    through a RemoteClient over zero-latency loopback."""
+    models = _models(6)
+    kw = dict(transport="loopback") if remote else {}
+    cl = build_cluster(models, scheduler=ClockworkScheduler(), seed=4, **kw)
+    rc = attach_remote_client(cl) if remote else None
+    submit = rc.submit if remote else cl.submit
+    gens = build_workload(cl.loop, submit, list(models), kind=kind,
+                          rate=40.0, concurrency=4,
+                          slo=0.030 if kind == "closed" else 0.100,
+                          duration=1.2, seed=10)
+    if remote:
+        rc.attach(gens)
+    else:
+        cl.attach_clients(gens)
+    cl.controller.start_heartbeats()
+    s = cl.run(1.5)
+    trace = [(r.action_type.value, r.model_id, r.worker_id, r.gpu_id,
+              r.batch_size, r.status.value, r.t_start, r.t_end, r.duration,
+              len(r.request_ids))
+             for r in cl.controller.results_log]
+    stats = {k: s[k] for k in ("goodput", "timeout", "rejected", "actions",
+                               "total")}
+    return stats, trace, rc
+
+
+# ----------------------------------------------------- decision equivalence
+
+@pytest.mark.parametrize("kind", WORKLOADS)
+def test_remote_client_zero_latency_equals_in_process(kind):
+    """Acceptance criterion: the same seeded workload driven through a
+    RemoteClient over zero-latency loopback must produce the identical
+    scheduler decision trace and goodput as in-process attach_clients —
+    every SUBMIT/RESPONSE round-trips through the real wire codec, yet
+    nothing about the decisions changes."""
+    s_in, t_in, _ = _run_seeded(kind, remote=False)
+    s_rc, t_rc, rc = _run_seeded(kind, remote=True)
+    assert s_in == s_rc
+    assert t_in == t_rc
+    assert s_in["goodput"] > 0
+    # client-observed counters agree with the controller's
+    assert rc.summary()["goodput"] == s_in["goodput"]
+    assert rc.in_flight == 0 and rc.lost == 0
+
+
+def test_loadgen_workload_determinism_under_seeded_loopback():
+    """The loadgen building blocks (build_workload + RemoteClient over a
+    seeded lossy/jittery loopback) are bit-reproducible run to run."""
+    def run():
+        cl = build_cluster(_models(5), scheduler=ClockworkScheduler(),
+                           seed=3, transport="loopback")
+        rc = attach_remote_client(cl, latency=0.002, jitter=0.001,
+                                  transport_seed=99)
+        gens = build_workload(cl.loop, rc.submit, list(cl.models),
+                              kind="maf", rate=30.0, slo=0.150,
+                              duration=1.5, seed=21)
+        rc.attach(gens)
+        s = cl.run(2.0)
+        return rc.summary(), tuple(rc.latencies), s["goodput"]
+
+    a, b = run(), run()
+    assert a == b
+    assert a[0]["sent"] > 0 and a[0]["goodput"] > 0
+
+
+# ------------------------------------------------------------ span stitching
+
+def test_client_spans_stitch_remote_interval():
+    cl = build_cluster(_models(2), scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0", "m1"])
+    rc = attach_remote_client(cl)
+    gens = build_workload(cl.loop, rc.submit, list(cl.models),
+                          kind="open", rate=30.0, slo=0.100,
+                          duration=1.0, seed=5)
+    rc.attach(gens)
+    cl.run(1.3)
+    spans = list(rc.recorder.iter_spans())
+    assert spans and all(s.status == "ok" for s in spans)
+    for s in spans:
+        assert not math.isnan(s.remote_arrival)
+        assert not math.isnan(s.remote_completion)
+        # zero-latency loopback: the only client-invisible time is the
+        # worker's result-return delay
+        assert s.net_overhead == pytest.approx(0.0005, abs=1e-6)
+    rep = client_breakdown(spans)
+    assert rep["client_total"]["count"] == len(spans)
+    assert rep["net_overhead"]["median"] == pytest.approx(0.0005, abs=1e-6)
+    assert rep["client_total"]["median"] > \
+        rep["controller_total"]["median"]
+    # spans survive a JSONL-style round-trip with the remote stamps
+    d = spans[0].to_dict()
+    s2 = type(spans[0]).from_dict(d)
+    assert s2.remote_arrival == spans[0].remote_arrival
+    assert s2.net_overhead == pytest.approx(spans[0].net_overhead)
+
+
+# -------------------------------------------------- disconnect with in-flight
+
+def test_client_disconnect_with_requests_in_flight_reclaims_state():
+    """Regression for the client-channel lifecycle leak: a client that
+    hangs up mid-request must disappear from the server's tracking, its
+    _req_origin entries must be purged, and its completions dropped —
+    not sent into a closed channel."""
+    cl = build_cluster(_models(1), scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0"])
+    server = cl.runtime.server
+    rc = attach_remote_client(cl)
+    responses = []
+    rc._responders.append(responses.append)
+    for _ in range(4):
+        rc.submit(Request(model_id="m0", arrival=cl.loop.now(), slo=0.200))
+    assert len(server.clients) == 1
+    assert len(server._req_origin) == 4
+    cl.loop.schedule(0.001, rc.close)      # hang up before any completion
+    cl.run(1.0)
+    # server state fully reclaimed
+    assert not server.clients
+    assert not server._req_origin
+    # the requests were still served (the scheduler had committed)...
+    assert cl.controller.stats["goodput"] == 4
+    # ...but nothing was delivered to the departed client
+    assert not responses
+    assert rc.lost == 4 and rc.in_flight == 0
+    # the loop stayed alive and the controller keeps serving others
+    rc2 = attach_remote_client(cl, transport_seed=1234)
+    rc2.submit(Request(model_id="m0", arrival=cl.loop.now(), slo=0.200))
+    cl.run(cl.loop.now() + 1.0)
+    assert rc2.summary()["goodput"] == 1
+    assert not server._req_origin
+
+
+# -------------------------------------------------------- malformed frames
+
+def test_version_mismatch_first_frame_closes_channel_not_loop():
+    cl = build_cluster(_models(1), scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0"])
+    server = cl.runtime.server
+    link = LoopbackLink(cl.loop)
+    server.adopt(link.a)
+    link.b.send({"v": 999, "kind": "hello", "worker_id": "evil",
+                 "gpus": []})
+    cl.run(0.1)
+    assert link.closed                     # offender closed...
+    assert server.bad_frames == 1
+    assert "evil" not in cl.controller.workers
+    # ...and the event loop survived: a well-behaved client still works
+    rc = attach_remote_client(cl)
+    rc.submit(Request(model_id="m0", arrival=cl.loop.now(), slo=0.200))
+    cl.run(cl.loop.now() + 1.0)
+    assert rc.summary()["goodput"] == 1
+
+
+def test_malformed_client_frame_closes_and_purges():
+    """A structurally bad frame mid-stream (missing keys) must close the
+    client channel, purge its in-flight entries, and leave the loop
+    alive."""
+    cl = build_cluster(_models(1), scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0"])
+    server = cl.runtime.server
+    rc = attach_remote_client(cl)
+    rc.submit(Request(model_id="m0", arrival=0.0, slo=0.200))
+    rc.channel.send({"v": 1, "kind": "submit"})    # no "request" payload
+    cl.run(1.0)
+    assert server.bad_frames == 1
+    assert rc.closed
+    assert not server.clients and not server._req_origin
+    # the controller itself is unharmed
+    assert cl.controller.stats["goodput"] == 1     # first request served
+
+
+def test_unknown_model_submit_rejected_without_entering_scheduler():
+    cl = build_cluster(_models(1), scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0"])
+    rc = attach_remote_client(cl)
+    req = Request(model_id="no_such_model", arrival=0.0, slo=0.200)
+    rc.submit(req)
+    cl.run(0.5)
+    assert rc.summary()["rejected"] == 1
+    assert rc.in_flight == 0
+    assert "no_such_model" not in cl.controller.scheduler.queues
+    # a real request on the same channel still succeeds
+    rc.submit(Request(model_id="m0", arrival=cl.loop.now(), slo=0.200))
+    cl.run(cl.loop.now() + 1.0)
+    assert rc.summary()["goodput"] == 1
+
+
+# ------------------------------------------------------- malicious values
+
+def test_malicious_field_values_close_channel_not_loop():
+    """Type-level garbage (strings where arithmetic expects numbers,
+    unhashable ids) must die at the frame boundary too."""
+    cl = build_cluster(_models(1), scheduler=ClockworkScheduler(),
+                       transport="loopback", preload=["m0"])
+    server = cl.runtime.server
+    evil = [
+        {"v": 1, "kind": "submit",
+         "request": {"id": 1, "model_id": "m0", "arrival": "NOW",
+                     "slo": []}},
+        {"v": 1, "kind": "submit", "request": 42},
+        {"v": 1, "kind": "hello", "worker_id": "wX",
+         "gpus": [{"total_pages": "lots"}]},
+    ]
+    for msg in evil:
+        link = LoopbackLink(cl.loop)
+        server.adopt(link.a)
+        link.b.send(msg)
+        assert link.closed, msg
+    assert server.bad_frames == len(evil)
+    rc = attach_remote_client(cl)
+    rc.submit(Request(model_id="m0", arrival=cl.loop.now(), slo=0.200))
+    cl.run(cl.loop.now() + 1.0)
+    assert rc.summary()["goodput"] == 1
+
+
+# --------------------------------------------------------- loadgen process
+
+def test_loadgen_child_cmd_is_flag_form_independent():
+    """The parent rebuilds child commands from parsed args, so
+    '--telemetry-jsonl=/x' and '--telemetry-jsonl /x' spellings behave
+    identically; seeds spread and per-child streams get suffixes."""
+    from repro.runtime import loadgen
+    ns = argparse.Namespace(
+        controller="h:1", workload="maf", n_models=2, rate=5.0,
+        concurrency=4, slo=0.1, duration=1.0, drain=2.0,
+        connect_timeout=10.0, seed=7, total_rate=40.0,
+        telemetry_jsonl="/tmp/x.jsonl", rotate_bytes=None)
+    cmd = loadgen._child_cmd(ns, 2)
+    assert cmd[cmd.index("--seed") + 1] == "2007"
+    assert cmd[cmd.index("--telemetry-jsonl") + 1] == "/tmp/x.jsonl.2"
+    assert cmd[cmd.index("--total-rate") + 1] == "40.0"
+    assert cmd[cmd.index("--processes") + 1] == "1"
+    assert "--emit-latencies" in cmd
+
+
+# ------------------------------------------------------- workload factory
+
+def test_build_workload_rejects_unknown_kind():
+    cl = build_cluster(_models(1), scheduler=ClockworkScheduler())
+    with pytest.raises(ValueError, match="unknown workload kind"):
+        build_workload(cl.loop, cl.submit, ["m0"], kind="bogus")
+
+
+def test_build_workload_start_offset_shifts_generators():
+    """A loadgen joins at loop.now() > 0: generators (including MAF rate
+    functions) must be phase-shifted so the workload shape is the same
+    regardless of join time."""
+    def run(offset):
+        cl = build_cluster(_models(3), scheduler=ClockworkScheduler(),
+                           seed=2)
+        if offset:
+            cl.loop.run_until(offset)      # time passes before clients join
+        gens = build_workload(cl.loop, cl.submit, list(cl.models),
+                              kind="maf", rate=30.0, slo=0.150,
+                              start=cl.loop.now(), duration=1.0, seed=7)
+        cl.attach_clients(gens)
+        cl.run(cl.loop.now() + 1.3)
+        return sum(g.sent for g in gens)
+
+    assert run(0.0) == run(5.0) > 0

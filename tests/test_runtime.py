@@ -173,9 +173,27 @@ def test_rtt_estimation_feeds_net_delay_over_loopback():
     cl.controller.start_heartbeats()
     cl.run(5.0)
     m = next(iter(cl.controller.workers.values()))
-    # rtt = 2*latency + worker result_delay; estimate is rtt/2
-    expect = 0.004 + 0.0005 / 2
-    assert m.net_delay == pytest.approx(expect, rel=0.2)
+    # PONG echoes the worker's reply turnaround (`hold`), so the estimate
+    # is the pure one-way network delay — result_delay no longer inflates it
+    assert m.net_delay == pytest.approx(0.004, rel=0.2)
+
+
+def test_net_delay_estimate_excludes_worker_turnaround():
+    """Regression for the net-delay overestimate: a worker that is *slow
+    to answer* (large result_delay) must not look like a *distant* worker.
+    The PONG's echoed hold duration is subtracted before the EWMA."""
+    models = _models(2)
+    cl = build_cluster(models, scheduler=ClockworkScheduler(),
+                       transport="loopback", latency=0.004,
+                       fold_net_delay=False)
+    for w in cl.workers:
+        w.result_delay = 0.080       # 20x the network leg
+    cl.runtime.server.estimate_net_delay = True
+    cl.controller.start_heartbeats()
+    cl.run(5.0)
+    m = next(iter(cl.controller.workers.values()))
+    assert m.net_delay == pytest.approx(0.004, rel=0.2)
+    assert m.net_delay < 0.010       # nowhere near latency + hold/2
 
 
 # ------------------------------------------------------------- membership

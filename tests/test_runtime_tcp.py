@@ -1,7 +1,8 @@
 """Multi-process TCP runtime smoke: controller + 2 worker daemons in
 separate OS processes over localhost, serving a short open-loop workload
-end to end with clean shutdown (the CI distributed smoke job runs the
-same example)."""
+end to end with clean shutdown — and the full three-process topology
+with the workload in its own loadgen process(es). (The CI distributed
+smoke jobs run the same example.)"""
 import json
 import os
 import subprocess
@@ -38,3 +39,34 @@ def test_tcp_demo_two_worker_daemons(tmp_path):
         assert path.exists()
         lines = [json.loads(l) for l in path.read_text().splitlines()]
         assert lines and all(l["kind"] == "gauge" for l in lines)
+
+
+def test_tcp_three_process_topology_with_loadgen():
+    """Acceptance criterion: loadgen + controller + 2 worker daemons over
+    localhost TCP — the workload lives in its own process(es) and the run
+    reports nonzero *client-observed* goodput with p50/p99 latency."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples",
+                                      "serve_distributed.py"),
+         "--smoke", "--workers", "2", "--duration", "2.0",
+         "--loadgen", "--loadgen-processes", "2"],
+        env=env, capture_output=True, text=True, timeout=180)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "SMOKE OK" in proc.stdout
+    out = json.loads(proc.stdout[proc.stdout.index("{"):
+                                 proc.stdout.rindex("}") + 1])
+    client = out["client"]
+    assert client["returncode"] == 0
+    assert client["goodput"] > 0
+    assert client["goodput"] == out["goodput"]    # client view == server view
+    assert client["timeout"] == 0 and client["lost"] == 0
+    assert client["p50"] > 0 and client["p99"] >= client["p50"]
+    # both child generators contributed and stitched net overhead
+    assert len(client["children"]) == 2
+    for ch in client["children"]:
+        assert ch["sent"] > 0
+        assert ch["report"]["net_overhead"]["median"] > 0
